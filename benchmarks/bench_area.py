@@ -1,0 +1,29 @@
+"""Table I — area model: MemPool tile kGE per synchronization design,
+plus the asymptotic state-count scaling (O(n log n · m) vs O(n + 2m))."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.costmodel import (PAPER_AREA, fit_area, system_overhead,
+                                  tile_area)
+
+
+def rows() -> List[Dict]:
+    fit = fit_area()
+    out = []
+    for name, (param, kge) in PAPER_AREA.items():
+        design = name.rsplit("_", 1)[0]
+        model = tile_area(design, param, fit)
+        out.append({"table": "area", "design": name, "paper_kge": kge,
+                    "model_kge": round(model, 1),
+                    "err_pct": round(100 * (model - kge) / kge, 2)})
+    for n, m in ((256, 1024), (1024, 4096), (4096, 16384)):
+        out.append({"table": "area_scaling", "cores": n, "banks": m,
+                    "ideal_state": system_overhead("lrscwait_ideal", n, m),
+                    "colibri_state": system_overhead("colibri", n, m)})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    errs = [abs(r["err_pct"]) for r in rs if r.get("table") == "area"]
+    return {"max_area_model_error_pct": max(errs)}

@@ -1,0 +1,49 @@
+"""Fig. 3 — histogram throughput vs. contention for every atomic protocol.
+
+The paper's claims validated here (EXPERIMENTS.md §Fig3):
+  * AMO add is the roofline at all contentions;
+  * Colibri ≈ LRSCwait_ideal (slight node-update penalty);
+  * LRSCwait_q collapses once contention > q;
+  * Colibri / LRSC ≈ 6.5× at highest contention, ~13–20% at low contention.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.sim import SimParams, run
+
+BINS = (1, 4, 16, 64, 256, 1024)
+PROTOS = ("amo", "lrsc", "lrscwait", "colibri")
+CYCLES = 12_000
+
+
+def rows(cycles: int = CYCLES) -> List[Dict]:
+    out = []
+    for proto in PROTOS:
+        for bins in BINS:
+            r = run(SimParams(protocol=proto, n_addrs=bins, cycles=cycles))
+            out.append({"figure": "fig3", "protocol": proto, "bins": bins,
+                        "updates_per_cycle": r["throughput"],
+                        "polls": int(r["polls"]),
+                        "msgs": int(r["msgs"]),
+                        "sleep_cyc": int(r["sleep_cyc"])})
+    # LRSCwait_q = 8 line (capacity collapse)
+    for bins in BINS:
+        r = run(SimParams(protocol="lrscwait", q_slots=8, n_addrs=bins,
+                          cycles=cycles))
+        out.append({"figure": "fig3", "protocol": "lrscwait_q8", "bins": bins,
+                    "updates_per_cycle": r["throughput"],
+                    "polls": int(r["polls"]), "msgs": int(r["msgs"]),
+                    "sleep_cyc": int(r["sleep_cyc"])})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    t = {(r["protocol"], r["bins"]): r["updates_per_cycle"] for r in rs}
+    return {
+        "high_contention_colibri_over_lrsc": t[("colibri", 1)] / t[("lrsc", 1)],
+        "low_contention_colibri_over_lrsc":
+            t[("colibri", 256)] / t[("lrsc", 256)],
+        "colibri_over_ideal_at_1": t[("colibri", 1)] / t[("lrscwait", 1)],
+        "amo_roofline_at_1": t[("amo", 1)],
+    }

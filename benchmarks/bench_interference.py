@@ -1,0 +1,38 @@
+"""Fig. 5 — matmul-worker slowdown from atomic pollers.
+
+252:4 .. 128:128 poller:worker splits on the congested-link regime
+(net_bw=13, hol_block=16, the paper's stated fixed 128-cycle backoff).
+Claims: Colibri pollers leave workers unaffected (≈1.0); LRSC pollers crush
+them (paper 0.26; our machine model 0.33 at 252:4)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.sim import SimParams, run
+
+SPLITS = (4, 16, 64, 128)                 # workers; pollers = 256 - workers
+PROTOS = ("amo", "lrsc", "colibri", "lrscwait")
+CYCLES = 8_000
+NET = dict(net_bw=13, hol_block=16, backoff=128, backoff_exp=1)
+
+
+def rows(cycles: int = CYCLES) -> List[Dict]:
+    out = []
+    for proto in PROTOS:
+        for w in SPLITS:
+            r = run(SimParams(protocol=proto, n_addrs=1, n_workers=w,
+                              cycles=cycles, **NET))
+            base = run(SimParams(protocol=proto, n_addrs=1, n_cores=w,
+                                 n_workers=w, cycles=cycles, **NET))
+            rel = r["worker_rate"] / max(base["worker_rate"], 1e-9)
+            out.append({"figure": "fig5", "protocol": proto,
+                        "pollers": 256 - w, "workers": w,
+                        "relative_worker_perf": rel})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    t = {(r["protocol"], r["workers"]): r["relative_worker_perf"]
+         for r in rs}
+    return {"lrsc_worker_perf_252_4": t[("lrsc", 4)],
+            "colibri_worker_perf_252_4": t[("colibri", 4)]}

@@ -1,0 +1,44 @@
+"""Fig. 6 — concurrent queue ops/cycle vs. core count + fairness band.
+
+Queue ops = RMWs on 2 hot addresses (head/tail) with link-update modify
+time, fixed backoff for the retry protocols. Claims: Colibri sustains flat
+throughput to 256 cores and is the fairest (narrow min/max band); LRSC and
+the lock-based queue collapse at scale. Calibration residual: our collapse
+onset is 256 cores (paper: 64) — see EXPERIMENTS.md."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.sim import SimParams, run
+
+CORES = (2, 8, 32, 64, 128, 256)
+PROTOS = ("colibri", "lrsc", "amo_lock")
+CYCLES = 10_000
+KW = dict(n_addrs=2, modify=8, backoff=128, backoff_exp=1)
+
+
+def rows(cycles: int = CYCLES) -> List[Dict]:
+    out = []
+    for proto in PROTOS:
+        for n in CORES:
+            r = run(SimParams(protocol=proto, n_cores=n, cycles=cycles, **KW))
+            out.append({"figure": "fig6", "protocol": proto, "cores": n,
+                        "ops_per_cycle": r["throughput"],
+                        "slowest_core": r["fairness_min"],
+                        "fastest_core": r["fairness_max"]})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    t = {(r["protocol"], r["cores"]): r for r in rs}
+    col, lrsc = t[("colibri", 8)], t[("lrsc", 8)]
+    span = lambda r: r["fastest_core"] / max(r["slowest_core"], 1e-9)
+    return {
+        "colibri_over_lrsc_8cores":
+            col["ops_per_cycle"] / lrsc["ops_per_cycle"],
+        "colibri_over_lrsc_256cores":
+            t[("colibri", 256)]["ops_per_cycle"]
+            / t[("lrsc", 256)]["ops_per_cycle"],
+        "colibri_fairness_span_256": span(t[("colibri", 256)]),
+        "lrsc_fairness_span_256": span(t[("lrsc", 256)]),
+    }

@@ -1,0 +1,38 @@
+"""Kernel-level colibri scatter vs. the retry-style XLA scatter-add.
+
+Wall-clock on this host (CPU, interpret-mode pallas for the kernel; the
+jnp sort+segment path is the apples-to-apples framework comparison) across
+the paper's contention axis (#bins). Derived column: colibri/naive speedup
+of the pure-JAX ordered-commit path."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import dispatch as D
+
+T = 1 << 18
+FEAT = 8
+
+
+def rows() -> List[Dict]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    vals = jax.random.normal(jax.random.PRNGKey(1), (T, FEAT))
+    ordered = jax.jit(D.ordered_segment_sum, static_argnums=2)
+    native = jax.jit(D.lrsc_scatter_add, static_argnums=2)
+    for bins in (2, 64, 4096):
+        keys = jax.random.randint(key, (T,), 0, bins)
+        _, t_ord = timed(lambda: ordered(keys, vals, bins))
+        _, t_nat = timed(lambda: native(keys, vals, bins))
+        out.append({"bench": "scatter_kernel", "bins": bins,
+                    "ordered_us": t_ord * 1e6, "native_us": t_nat * 1e6,
+                    "speedup": t_nat / t_ord})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    return {f"speedup_bins{r['bins']}": round(r["speedup"], 2) for r in rs}

@@ -1,0 +1,22 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    """(result, seconds_per_call) with block_until_ready semantics."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

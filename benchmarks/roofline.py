@@ -1,0 +1,280 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) cell.
+
+    compute term    = FLOPs_per_device / 197e12        (bf16 peak per chip)
+    memory term     = HBM_bytes_per_device / 819e9
+    collective term = collective_bytes_per_device / 50e9 (per-link ICI)
+
+Sources & corrections (documented in EXPERIMENTS.md §Dry-run notes):
+  * ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for
+    scan-over-layers models this undercounts by ~the layer count. The
+    compute/memory terms therefore use the ANALYTIC executed-cost model
+    below (validated against unrolled HLO counts in tests), while the raw
+    HLO numbers are reported alongside.
+  * The collective term uses the loop-corrected HLO parse
+    (``hlo_analysis.collective_bytes_corrected``) — per-device bytes of
+    every all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute
+    multiplied by its loop trip counts.
+  * MODEL_FLOPS = 6·N·D (dense train) or 6·N_active·D (MoE); the ratio
+    MODEL_FLOPS / executed-FLOPs exposes remat recompute, full-square causal
+    attention, and CE-chunk recompute waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per link
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Analytic executed-cost model
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """The 'useful' FLOPs: 6·N·D train, 2·N·D forward-only (global)."""
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def executed_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic FLOPs the compiled step actually executes (global):
+    matmul factor per pass + remat recompute + full-square blocked causal
+    attention + CE chunk recompute. Validated vs unrolled HLO counts."""
+    n = cfg.num_active_params()
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    b, s = shape.global_batch, shape.seq_len
+    kinds = cfg.layer_kinds()
+
+    if shape.kind == "train":
+        # fwd(2) + bwd(4) + remat re-fwd(2 if remat)
+        factor = 8.0 if cfg.parallel.remat else 6.0
+        tokens = b * s
+        core = factor * n * tokens
+        # attention: blocked causal computes the FULL square (no triangle
+        # skip): per attn layer 2 matmuls * 2 flops * B*S^2*H*hd per pass
+        attn = 0.0
+        for kind in kinds:
+            if kind == "attn":
+                eff_s = s
+            elif kind == "local":
+                eff_s = min(2 * cfg.local_window, s)
+            else:
+                continue
+            attn += 2 * 2 * b * s * eff_s * h * hd
+        if cfg.encoder is not None:
+            e = cfg.encoder
+            attn += cfg.encoder.num_layers * 2 * 2 * b * e.seq_len ** 2 * h * hd
+            attn += cfg.num_layers * 2 * 2 * b * s * e.seq_len * h * hd
+        attn_total = attn * (2.0 if not cfg.parallel.remat else 3.0)
+        # CE loss: logits fwd + bwd + checkpoint re-fwd over all chunks
+        ce = 2.0 * b * s * d * cfg.vocab_size * 4.0
+        return core + attn_total + ce
+    if shape.kind == "prefill":
+        tokens = b * s
+        core = 2.0 * n * tokens
+        attn = 0.0
+        for kind in kinds:
+            if kind == "attn":
+                attn += 2 * 2 * b * s * s * h * hd
+            elif kind == "local":
+                attn += 2 * 2 * b * s * min(2 * cfg.local_window, s) * h * hd
+        if cfg.encoder is not None:
+            e = cfg.encoder
+            attn += cfg.encoder.num_layers * 2 * 2 * b * e.seq_len ** 2 * h * hd
+            attn += cfg.num_layers * 2 * 2 * b * s * e.seq_len * h * hd
+        return core + attn
+    # decode: one token; attention reads the cache
+    core = 2.0 * n * b
+    attn = 0.0
+    for kind in kinds:
+        if kind == "attn":
+            if cfg.attn_kind == "mla":
+                r = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                attn += 2 * 2 * b * s * h * r        # absorbed latent scores
+            else:
+                attn += 2 * 2 * b * s * h * hd
+        elif kind == "local":
+            attn += 2 * 2 * b * min(cfg.local_window, s) * h * hd
+    if cfg.encoder is not None:
+        attn += cfg.num_layers * 2 * 2 * b * cfg.encoder.seq_len * h * hd
+    return core + attn
+
+
+def executed_bytes(cfg: ModelConfig, shape: ShapeSpec, chips: int) -> float:
+    """Analytic HBM traffic per STEP (global bytes): parameter/optimizer
+    streams + activation traffic + (decode) cache read/write."""
+    n_total = cfg.num_params()
+    p_bytes = 2.0 * n_total                      # bf16 weights
+    if shape.kind == "train":
+        opt_b = {"float32": 4, "bfloat16": 2, "int8": 1}[
+            cfg.parallel.opt_state_dtype]
+        # fwd read + remat read + bwd read + grad write (accum dtype) +
+        # optimizer: read m,v + write m,v + write params
+        traffic = p_bytes * (3.0 + 1.0) \
+            + 2.0 * n_total * opt_b * 2.0 + p_bytes
+        traffic *= 1.0
+        # per-microbatch weight re-reads under accumulation
+        traffic += p_bytes * 2.0 * max(cfg.parallel.accum_steps - 1, 0)
+        # activations: ~14 hidden-size tensors per layer, fwd+bwd, bf16
+        act = 14 * cfg.num_layers * shape.global_batch * shape.seq_len \
+            * cfg.d_model * 2 * 2
+        return traffic + act
+    if shape.kind == "prefill":
+        act = 10 * cfg.num_layers * shape.global_batch * shape.seq_len \
+            * cfg.d_model * 2
+        return p_bytes + act
+    # decode: weights + full cache read + cache write
+    cache = _cache_bytes(cfg, shape)
+    return p_bytes + cache + shape.global_batch * cfg.d_model * 2 \
+        * cfg.num_layers * 4
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            if cfg.attn_kind == "mla":
+                total += b * s * (cfg.mla.kv_lora_rank
+                                  + cfg.mla.qk_rope_head_dim) * 2
+            else:
+                total += 2 * b * s * cfg.num_kv_heads \
+                    * cfg.resolved_head_dim * 2
+        elif kind == "local":
+            total += 2 * b * min(cfg.local_window, s) * cfg.num_kv_heads \
+                * cfg.resolved_head_dim * 2
+        elif kind == "rglru":
+            w = cfg.recurrent.lru_width or cfg.d_model
+            total += b * w * 4
+        elif kind == "rwkv":
+            hd = cfg.recurrent.head_dim
+            total += b * (cfg.d_model // hd) * hd * hd * 4
+    if cfg.encoder is not None:
+        total += 2 * b * cfg.encoder.seq_len * cfg.num_heads \
+            * cfg.resolved_head_dim * 2
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Roofline assembly
+# ---------------------------------------------------------------------------
+
+def cell_report(arch: str, shape_name: str, mesh: str = "pod16x16",
+                report_dir: str = REPORT_DIR) -> Optional[Dict]:
+    path = os.path.join(report_dir, f"{arch}__{shape_name}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline(arch: str, shape_name: str, mesh: str = "pod16x16",
+             report_dir: str = REPORT_DIR) -> Optional[Dict]:
+    rep = cell_report(arch, shape_name, mesh, report_dir)
+    if rep is None or rep.get("status") != "ok":
+        return rep
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = 512 if "2x16" in mesh else 256
+    mf = model_flops(cfg, shape)
+    ef = executed_flops(cfg, shape)
+    eb = executed_bytes(cfg, shape, chips)
+    coll = rep["collectives"]["total"]           # per device, loop-corrected
+    t_compute = ef / chips / PEAK_FLOPS
+    t_memory = eb / chips / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh,
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "executed_flops": ef,
+        "useful_ratio": mf / ef,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "step_time_lower_bound_s": bound,
+        "hlo_flops_per_device_raw": rep["cost"]["flops"],
+        "hlo_bytes_per_device_raw": rep["cost"]["bytes_accessed"],
+        "collective_bytes_per_device": coll,
+        "collective_bytes_raw": rep["collectives"].get("total_raw", 0.0),
+        "peak_hbm_gib": rep["memory"].get("peak_bytes", 0) / 2**30,
+        "fits_16g": rep["memory"].get("peak_bytes", 0) <= 16 * 2**30,
+    }
+
+
+def full_table(mesh: str = "pod16x16", report_dir: str = REPORT_DIR
+               ) -> List[Dict]:
+    rows = []
+    for arch in ARCH_NAMES:
+        for shape_name in SHAPES:
+            cfg = get_config(arch)
+            ok, reason = shape_applicable(cfg, SHAPES[shape_name])
+            if not ok:
+                rows.append({"arch": arch, "shape": shape_name, "mesh": mesh,
+                             "dominant": "skipped", "reason": reason})
+                continue
+            r = roofline(arch, shape_name, mesh, report_dir)
+            if r is None:
+                rows.append({"arch": arch, "shape": shape_name, "mesh": mesh,
+                             "dominant": "missing"})
+            elif r.get("status") == "failed":
+                rows.append({"arch": arch, "shape": shape_name, "mesh": mesh,
+                             "dominant": "FAILED",
+                             "reason": r.get("error", "")[:80]})
+            else:
+                rows.append(r)
+    return rows
+
+
+def print_table(rows: List[Dict]):
+    hdr = (f"{'arch':20s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collective':>10s} {'dominant':>11s} {'roofline%':>9s} "
+           f"{'useful%':>8s} {'HBM GiB':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "compute_s" not in r:
+            print(f"{r['arch']:20s} {r['shape']:12s} "
+                  f"{'-':>9s} {'-':>9s} {'-':>10s} {r['dominant']:>11s}")
+            continue
+        print(f"{r['arch']:20s} {r['shape']:12s} "
+              f"{r['compute_s']*1e3:8.1f}ms {r['memory_s']*1e3:8.1f}ms "
+              f"{r['collective_s']*1e3:9.1f}ms "
+              f"{r['dominant'].replace('_s',''):>11s} "
+              f"{100*r['roofline_fraction']:8.1f}% "
+              f"{100*r['useful_ratio']:7.1f}% "
+              f"{r['peak_hbm_gib']:8.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16",
+                    choices=["pod16x16", "pod2x16x16"])
+    args = ap.parse_args()
+    rows = full_table(args.mesh)
+    print_table(rows)
+    out = os.path.join(os.path.dirname(__file__), "..", "reports",
+                       f"roofline_{args.mesh}.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    print(f"\n-> {out}")

@@ -1,0 +1,46 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus a headline summary that
+EXPERIMENTS.md quotes. Roofline/dry-run analysis lives in
+``benchmarks/roofline.py`` (reads reports/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _run(name, mod):
+    t0 = time.perf_counter()
+    rs = mod.rows()
+    dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rs), 1)
+    head = mod.headline(rs)
+    derived = ";".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in head.items())
+    print(f"{name},{dt_us:.1f},{derived}")
+    return {"rows": rs, "headline": head}
+
+
+def main() -> None:
+    from benchmarks import (bench_area, bench_energy, bench_histogram,
+                            bench_interference, bench_locks, bench_queue,
+                            bench_scatter_kernel)
+    results = {}
+    print("name,us_per_call,derived")
+    results["fig3_histogram"] = _run("fig3_histogram", bench_histogram)
+    results["fig4_locks"] = _run("fig4_locks", bench_locks)
+    results["fig5_interference"] = _run("fig5_interference", bench_interference)
+    results["fig6_queue"] = _run("fig6_queue", bench_queue)
+    results["table1_area"] = _run("table1_area", bench_area)
+    results["table2_energy"] = _run("table2_energy", bench_energy)
+    results["scatter_kernel"] = _run("scatter_kernel", bench_scatter_kernel)
+
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "reports")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "benchmarks.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# full rows -> {os.path.join(out_dir, 'benchmarks.json')}")
+
+
+if __name__ == "__main__":
+    main()

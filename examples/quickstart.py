@@ -1,0 +1,29 @@
+"""Quickstart: train a reduced smollm-135m on CPU for a few steps, then
+reproduce the paper's headline result (Fig. 3 ratios) with the simulator.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.sim import SimParams, run
+from repro.launch.train import TrainRun, run_training
+
+
+def main():
+    print("=== 1. train a reduced smollm-135m (CPU) ===")
+    cfg = get_config("smollm-135m-smoke")
+    out = run_training(TrainRun(cfg=cfg, shape=ShapeSpec("t", 128, 4, "train"),
+                                steps=20, log_every=5))
+    print(f"final loss: {out['loss']:.4f}\n")
+
+    print("=== 2. paper headline: Colibri vs LRSC (Fig. 3) ===")
+    hi_c = run(SimParams(protocol="colibri", n_addrs=1))["throughput"]
+    hi_l = run(SimParams(protocol="lrsc", n_addrs=1))["throughput"]
+    lo_c = run(SimParams(protocol="colibri", n_addrs=256))["throughput"]
+    lo_l = run(SimParams(protocol="lrsc", n_addrs=256))["throughput"]
+    print(f"high contention: colibri/lrsc = {hi_c/hi_l:.2f}x (paper: 6.5x)")
+    print(f"low contention:  colibri/lrsc = {lo_c/lo_l:.2f}x (paper: 1.13x)")
+
+
+if __name__ == "__main__":
+    main()

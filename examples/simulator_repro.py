@@ -1,0 +1,29 @@
+"""Reproduce every figure/table of the paper from the cycle-level simulator.
+
+    PYTHONPATH=src python examples/simulator_repro.py
+"""
+from benchmarks import (bench_area, bench_energy, bench_histogram,
+                        bench_interference, bench_locks, bench_queue)
+
+
+def main():
+    for name, mod, paper in [
+        ("Fig.3 histogram", bench_histogram,
+         "colibri/lrsc: 6.5x high contention, ~1.13x low"),
+        ("Fig.4 locks", bench_locks, "colibri best at all contentions"),
+        ("Fig.5 interference", bench_interference,
+         "lrsc slows workers to 0.26; colibri ~1.0"),
+        ("Fig.6 queue", bench_queue, "1.54x @8 cores; collapse at scale"),
+        ("Table I area", bench_area, "<=2% model error"),
+        ("Table II energy", bench_energy, "7.1x / 8.8x efficiency"),
+    ]:
+        rows = mod.rows() if name != "Table I area" else mod.rows()
+        head = mod.headline(rows)
+        print(f"--- {name} (paper: {paper})")
+        for k, v in head.items():
+            print(f"    {k} = {v:.3f}" if isinstance(v, float)
+                  else f"    {k} = {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro.core — the paper's contribution.
+
+* ``dispatch``  — colibri ordered-commit: the LRSCwait insight (linearize at
+  request time, serve in order, commit exactly once) as an SPMD primitive.
+* ``sim``       — vectorized cycle-level manycore simulator (performance
+  reproduction: Figs. 3–6).
+* ``colibri``   — message-level protocol model (correctness: Section IV-A).
+* ``costmodel`` — area/energy models calibrated to Tables I–II.
+"""
+from repro.core import colibri, costmodel, dispatch, sim
+
+__all__ = ["colibri", "costmodel", "dispatch", "sim"]

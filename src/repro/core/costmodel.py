@@ -1,0 +1,148 @@
+"""Area and energy models calibrated to the paper's Tables I and II.
+
+Silicon numbers cannot be re-derived in JAX; we model them structurally
+(component counts × per-component costs) and fit the per-component costs to
+the published rows, reporting residuals. See DESIGN.md §2.
+
+Table I (area, kGE, MemPool tile = 4 cores + 16 banks):
+    tile 691 | +LRSCwait_1 790 | +LRSCwait_8 865 |
+    +Colibri 1/2/4/8 addr: 732 / 750 / 761 / 802
+
+Table II (energy @ highest contention):
+    AMO 29 pJ/op | Colibri 124 | LRSC 884 | AMO lock 1092
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+TILE_CORES = 4
+TILE_BANKS = 16
+TILE_BASE_KGE = 691.0
+
+PAPER_AREA = {  # design -> (param, kGE)
+    "lrscwait_1": (1, 790.0),
+    "lrscwait_8": (8, 865.0),
+    "colibri_1": (1, 732.0),
+    "colibri_2": (2, 750.0),
+    "colibri_4": (4, 761.0),
+    "colibri_8": (8, 802.0),
+}
+
+PAPER_ENERGY = {  # protocol -> pJ/op at highest contention
+    "amo": 29.0, "colibri": 124.0, "lrsc": 884.0, "amo_lock": 1092.0,
+}
+
+
+# ---------------------------------------------------------------------------
+# Area model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AreaFit:
+    lrscwait_ctrl: float      # per-bank controller (kGE)
+    lrscwait_slot: float      # per queue slot per bank
+    colibri_ctrl: float       # per-bank head/tail controller
+    colibri_addr: float       # per additional address queue per bank
+    qnode: float              # per-core Qnode
+
+
+def fit_area() -> AreaFit:
+    """Least-squares fit of component costs to Table I."""
+    # lrscwait: overhead = banks * (ctrl + slot*q)
+    a = np.array([[TILE_BANKS, TILE_BANKS * 1],
+                  [TILE_BANKS, TILE_BANKS * 8]])
+    b = np.array([790 - 691, 865 - 691], float)
+    ctrl, slot = np.linalg.solve(a, b)
+    # colibri: overhead = banks * (ctrl2 + addr*(A-1)) + cores * qnode
+    rows, rhs = [], []
+    for name, (A, kge) in PAPER_AREA.items():
+        if name.startswith("colibri"):
+            rows.append([TILE_BANKS, TILE_BANKS * (A - 1), TILE_CORES])
+            rhs.append(kge - TILE_BASE_KGE)
+    sol, *_ = np.linalg.lstsq(np.array(rows, float), np.array(rhs), rcond=None)
+    ctrl2, addr, qnode = sol
+    return AreaFit(float(ctrl), float(slot), float(ctrl2), float(addr),
+                   float(qnode))
+
+
+def tile_area(design: str, param: int, fit: AreaFit = None) -> float:
+    """kGE of a MemPool tile with the given synchronization design."""
+    fit = fit or fit_area()
+    if design == "base":
+        return TILE_BASE_KGE
+    if design == "lrscwait":
+        return TILE_BASE_KGE + TILE_BANKS * (
+            fit.lrscwait_ctrl + fit.lrscwait_slot * param)
+    if design == "colibri":
+        return TILE_BASE_KGE + TILE_BANKS * (
+            fit.colibri_ctrl + fit.colibri_addr * (param - 1)) \
+            + TILE_CORES * fit.qnode
+    raise ValueError(design)
+
+
+def system_overhead(design: str, n_cores: int, n_banks: int,
+                    q: int = 1) -> float:
+    """Asymptotic state count (paper Section III-A / IV):
+    LRSCwait_ideal is O(n·log2(n)·m); Colibri is O(n + 2m)."""
+    if design == "lrscwait_ideal":
+        return n_cores * np.log2(max(n_cores, 2)) * n_banks
+    if design == "lrscwait_q":
+        return q * np.log2(max(n_cores, 2)) * n_banks
+    if design == "colibri":
+        return n_cores + 2 * n_banks
+    raise ValueError(design)
+
+
+# ---------------------------------------------------------------------------
+# Energy model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnergyFit:
+    e_msg: float          # pJ per network message
+    e_bank: float         # pJ per bank operation
+    e_active: float       # pJ per core-active cycle (issue/stall)
+    e_backoff: float      # pJ per backoff-loop cycle (busy wait)
+    e_sleep: float        # pJ per core-sleep cycle (clock-gated)
+    residuals: Dict[str, float]
+
+
+def fit_energy(stats: Dict[str, Dict[str, float]]) -> EnergyFit:
+    """Fit per-event energies so that per-op energy matches Table II.
+
+    ``stats[protocol]`` must provide: msgs, bank_ops, active_cyc, sleep_cyc,
+    ops (totals from a highest-contention simulation).
+    """
+    protos = [p for p in ("amo", "colibri", "lrsc", "amo_lock") if p in stats]
+    rows, rhs = [], []
+    for pr in protos:
+        s = stats[pr]
+        ops = max(s["ops"], 1.0)
+        rows.append([s["msgs"] / ops, s["bank_ops"] / ops,
+                     (s["active_cyc"] - s["backoff_cyc"]) / ops,
+                     s["backoff_cyc"] / ops, s["sleep_cyc"] / ops])
+        rhs.append(PAPER_ENERGY[pr])
+    A = np.array(rows, float)
+    b = np.array(rhs, float)
+    # relative-error weighting (targets span 29..1092 pJ/op), non-negative
+    # least squares via projected gradient (tiny problem)
+    Aw = A / b[:, None]
+    bw = np.ones_like(b)
+    x = np.maximum(np.linalg.lstsq(Aw, bw, rcond=None)[0], 0.0)
+    lr = 0.5 / max(np.linalg.eigvalsh(Aw.T @ Aw).max(), 1e-12)
+    for _ in range(20000):
+        g = Aw.T @ (Aw @ x - bw)
+        x = np.maximum(x - lr * g, 0.0)
+    resid = {pr: float(A[i] @ x - b[i]) for i, pr in enumerate(protos)}
+    return EnergyFit(*[float(v) for v in x], residuals=resid)
+
+
+def energy_per_op(stats: Dict[str, float], fit: EnergyFit) -> float:
+    ops = max(stats["ops"], 1.0)
+    return (fit.e_msg * stats["msgs"] + fit.e_bank * stats["bank_ops"]
+            + fit.e_active * (stats["active_cyc"] - stats["backoff_cyc"])
+            + fit.e_backoff * stats["backoff_cyc"]
+            + fit.e_sleep * stats["sleep_cyc"]) / ops

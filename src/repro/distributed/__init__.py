@@ -1,0 +1,6 @@
+from repro.distributed.coordinator import ElasticController, EventCoordinator
+from repro.distributed.sharding import (Policy, cache_specs, make_policy,
+                                        param_specs, shardings_of)
+
+__all__ = ["Policy", "make_policy", "param_specs", "cache_specs",
+           "shardings_of", "EventCoordinator", "ElasticController"]

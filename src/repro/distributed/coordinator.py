@@ -1,0 +1,87 @@
+"""Event-driven host coordinator — the framework-level Mwait analogue.
+
+The paper's Mwait lets a core sleep until a memory location changes instead
+of polling it. At the training-framework level the same anti-pattern is a
+coordinator thread polling "is the checkpoint done? did a worker die?" in a
+loop. This coordinator is condition-variable based: waiters sleep on an
+event name (optionally with an *expected value* — Mwait's race-closing
+check) and are woken exactly when it fires.
+
+Used by: async checkpointing (save-complete events), the elastic controller
+(membership-change events), and the serving engine's request queue.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional
+
+
+class EventCoordinator:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._values: Dict[str, Any] = {}
+        self._seq: Dict[str, int] = defaultdict(int)
+        self._subscribers: Dict[str, List[Callable]] = defaultdict(list)
+
+    def notify(self, event: str, **payload):
+        """Fire an event (the 'store' that wakes Mwait sleepers)."""
+        with self._cv:
+            self._values[event] = payload
+            self._seq[event] += 1
+            subs = list(self._subscribers.get(event, ()))
+            self._cv.notify_all()
+        for fn in subs:
+            fn(**payload)
+
+    def wait(self, event: str, *, expected: Any = None,
+             timeout: Optional[float] = None) -> Any:
+        """Sleep until ``event`` fires. Like Mwait's expected-value check:
+        if the current value already differs from ``expected``, return
+        immediately (the change we were waiting for already happened)."""
+        with self._cv:
+            if event in self._values and self._values[event] != expected:
+                return self._values[event]
+            start_seq = self._seq[event]
+            ok = self._cv.wait_for(lambda: self._seq[event] > start_seq,
+                                   timeout=timeout)
+            if not ok:
+                raise TimeoutError(f"wait({event!r}) timed out")
+            return self._values[event]
+
+    def subscribe(self, event: str, fn: Callable):
+        with self._cv:
+            self._subscribers[event].append(fn)
+
+    def value(self, event: str) -> Any:
+        with self._cv:
+            return self._values.get(event)
+
+
+class ElasticController:
+    """Membership / failure bookkeeping for elastic multi-pod training.
+
+    On a real cluster the notifications come from the job scheduler; here
+    they are injected by tests and the failure-resume example. Policy:
+    * a failed worker triggers restore-from-latest + mesh re-shape,
+    * scale-up/down re-shards the same checkpoint onto the new mesh
+      (``Checkpointer.restore`` with a new sharding_fn).
+    """
+
+    def __init__(self, coordinator: EventCoordinator, n_workers: int):
+        self.coord = coordinator
+        self.n_workers = n_workers
+        self.alive = set(range(n_workers))
+        coordinator.subscribe("worker_failed", self._on_fail)
+        coordinator.subscribe("worker_joined", self._on_join)
+
+    def _on_fail(self, worker: int, **_):
+        self.alive.discard(worker)
+        self.coord.notify("membership_changed", alive=len(self.alive))
+
+    def _on_join(self, worker: int, **_):
+        self.alive.add(worker)
+        self.coord.notify("membership_changed", alive=len(self.alive))
+
+    def healthy(self) -> bool:
+        return len(self.alive) == self.n_workers

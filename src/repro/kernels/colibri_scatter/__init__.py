@@ -1,0 +1,3 @@
+from repro.kernels.colibri_scatter.ops import colibri_scatter_add
+
+__all__ = ["colibri_scatter_add"]

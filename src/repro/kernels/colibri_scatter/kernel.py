@@ -1,0 +1,78 @@
+"""THE paper kernel: retry-free contended scatter-RMW on TPU.
+
+TPU adaptation of Colibri (DESIGN.md §2): the linearization happens ONCE at
+"request time" — a stable sort of the keys outside the kernel (XLA's TPU
+sort) — and this kernel performs the **serve + commit** phase: a segmented
+reduction over the sorted stream, committing each bin exactly once. No
+atomics, no retries, no serialized conflict resolution at the destination.
+
+The within-block reduction is MXU-shaped: a one-hot (bins_tile × block_t)
+matrix multiplies the (block_t × d) value block — the histogram becomes a
+matmul, which is exactly how a TPU wants to count.
+
+Grid: (bins_tiles, t_blocks); t sweeps innermost so the VMEM accumulator
+carries partial sums for one bins-tile across the whole stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 512
+DEFAULT_BLOCK_BINS = 128
+
+
+def _kernel(keys_ref, vals_ref, out_ref, acc_ref, *, block_bins: int):
+    tb = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(tb == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bin_base = pl.program_id(0) * block_bins
+    keys = keys_ref[...]                                   # (block_t,)
+    vals = vals_ref[...]                                   # (block_t, d)
+    # one-hot commit matrix for this bins tile: (block_bins, block_t)
+    local = keys - bin_base
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_bins, keys.shape[0]), 0)
+    onehot = (rows == local[None, :]).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(onehot, vals.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(tb == nb - 1)
+    def _():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def scatter_commit(sorted_keys: jnp.ndarray, sorted_vals: jnp.ndarray,
+                   num_bins: int, *, block_t: int = DEFAULT_BLOCK_T,
+                   block_bins: int = DEFAULT_BLOCK_BINS,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Segmented commit of a key-sorted stream. vals: (T, d) -> (bins, d)."""
+    t, d = sorted_vals.shape
+    bt = min(block_t, t)
+    bb = min(block_bins, num_bins)
+    pad_t = (-t) % bt
+    pad_b = (-num_bins) % bb
+    keys = jnp.pad(sorted_keys, (0, pad_t), constant_values=num_bins + pad_b)
+    vals = jnp.pad(sorted_vals, ((0, pad_t), (0, 0)))
+    nbins = num_bins + pad_b
+    grid = (nbins // bb, (t + pad_t) // bt)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_bins=bb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt,), lambda b, i: (i,)),
+            pl.BlockSpec((bt, d), lambda b, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbins, d), sorted_vals.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, d), jnp.float32)],
+        interpret=interpret,
+    )(keys, vals)
+    return out[:num_bins]

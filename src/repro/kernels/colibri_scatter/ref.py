@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: native scatter-add (the retry-style baseline)."""
+import jax.numpy as jnp
+
+
+def scatter_add_ref(keys: jnp.ndarray, vals: jnp.ndarray,
+                    num_bins: int) -> jnp.ndarray:
+    shape = (num_bins,) + vals.shape[1:]
+    return jnp.zeros(shape, vals.dtype).at[keys].add(vals)
+
+
+def histogram_ref(keys: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    return jnp.bincount(keys, length=num_bins)

@@ -1,0 +1,98 @@
+"""Streaming-softmax (flash) attention kernel: causal + GQA.
+
+Grid: (batch*q_heads, q_blocks, kv_blocks); the kv dimension is innermost so
+the VMEM scratch (running max / denominator / accumulator) carries across kv
+blocks for one query tile. Softmax statistics in fp32; QK^T and PV hit the
+MXU with ``preferred_element_type=f32``. Causal masking is positional (the
+upper-triangle blocks are masked; skipping them entirely is a Mosaic grid
+remap noted as a TPU perf follow-up in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, block_q: int, block_k: int,
+            seq_kv: int):
+    kb = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    q_pos = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_kv
+    if causal:
+        mask &= q_pos >= k_pos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                         ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True
+                           ) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd) — kv already expanded to q heads
+    (GQA expansion is free under XLA; the absorbed-GQA variant is a TPU perf
+    follow-up). Returns (BH, Sq, hd)."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pq, pk = (-sq) % bq, (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    grid = (bh, (sq + pq) // bq, (skv + pk) // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, scale=scale, block_q=bq,
+                          block_k=bk, seq_kv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]

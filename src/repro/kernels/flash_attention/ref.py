@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: naive O(S^2) softmax attention."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

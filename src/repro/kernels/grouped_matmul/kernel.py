@@ -1,0 +1,57 @@
+"""Grouped expert GEMM for MoE: (E, C, d) @ (E, d, f) -> (E, C, f).
+
+Consumes the colibri-dispatch buffers directly (one GEMM per expert over its
+capacity slots). Grid: (E, C_tiles, f_tiles, d_tiles) with the contraction
+dim innermost accumulating in fp32 VMEM scratch — MXU-aligned (128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    db = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(db == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(db == nd - 1)
+    def _():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_matmul_kernel(x: jnp.ndarray, w: jnp.ndarray, *,
+                          block_c: int = 128, block_f: int = 128,
+                          block_d: int = 256, interpret: bool = True
+                          ) -> jnp.ndarray:
+    e, c, d = x.shape
+    f = w.shape[2]
+    bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
+    pc, pf, pd = (-c) % bc, (-f) % bf, (-d) % bd
+    xp = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    wp = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    grid = (e, (c + pc) // bc, (f + pf) // bf, (d + pd) // bd)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c + pc, f + pf), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :c, :f]

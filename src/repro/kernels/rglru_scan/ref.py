@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: associative scan for h_t = a_t h_{t-1} + b_t."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(a, b, h0):
+    """a, b: (T, B, w); h0: (B, w)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    a_cum, h = lax.associative_scan(combine, (a.astype(jnp.float32),
+                                              b.astype(jnp.float32)), axis=0)
+    return h + a_cum * h0[None].astype(jnp.float32)

@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6_wkv.ops import wkv_chunked
+
+__all__ = ["wkv_chunked"]

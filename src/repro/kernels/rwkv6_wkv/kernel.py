@@ -1,0 +1,96 @@
+"""Chunked-parallel RWKV-6 WKV kernel (data-dependent decay linear attention).
+
+The exact recurrence (ref.py / models.rwkv6) is O(T) sequential; this kernel
+processes the sequence in chunks of C: within a chunk the interaction is a
+(C × C) masked matmul (MXU work), across chunks a (hd × hd) state matrix is
+carried in VMEM scratch. Decay products are evaluated in log space; the
+cross-term factorisation exp(L_prev[t])·exp(-L[s]) is clamped at ±30 — the
+clamp only bites when the true decay ratio underflows anyway.
+
+Grid: (B·H, T_chunks) with chunks innermost (state carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CLAMP = 30.0
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, block_c: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)              # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = jnp.log(jnp.maximum(w_ref[0].astype(jnp.float32), 1e-38))  # ≤ 0
+    u = u_ref[0].astype(jnp.float32)              # (1, hd) bonus row
+
+    L = jnp.cumsum(lw, axis=0)                    # inclusive log-decay
+    L_prev = L - lw                               # exclusive
+    S = s_ref[...]                                # (hd, hd) carried state
+
+    # inter-chunk: contributions of all previous chunks through S
+    r_dec = r * jnp.exp(jnp.maximum(L_prev, -CLAMP))
+    out = jax.lax.dot_general(r_dec, S, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    # intra-chunk: pairwise s < t via factored decay ratios
+    k_inv = k * jnp.exp(jnp.minimum(-L, CLAMP))
+    att = jax.lax.dot_general(r_dec, k_inv, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (C, C)
+    c = r.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    att = jnp.where(rows > cols, att, 0.0)        # strictly causal
+    out += jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    # diagonal bonus term: out_t += (r_t · (u ⊙ k_t)) v_t
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)
+    out += diag * v
+    o_ref[0, ...] = out.astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(L_last)) S + (k ⊙ exp(L_last - L))^T v
+    l_last = L[-1]
+    k_tail = k * jnp.exp(L[-1][None, :] - L)      # ≤ 1, safe
+    s_ref[...] = jnp.exp(l_last)[:, None] * S + jax.lax.dot_general(
+        k_tail, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def wkv_chunked_kernel(r, k, v, w, u, *, block_c: int = 64,
+                       interpret: bool = True) -> jnp.ndarray:
+    """r,k,v,w: (BH, T, hd); u: (BH, hd). Returns (BH, T, hd) fp32."""
+    bh, t, hd = r.shape
+    c = min(block_c, t)
+    pad = (-t) % c
+    def pp(x):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    rp, kp, vp = pp(r), pp(k), pp(v)
+    wp = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    grid = (bh, (t + pad) // c)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_c=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, hd), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t + pad, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rp, kp, vp, wp, u)
+    return out[:, :t]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: exact sequential WKV recurrence."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (BH, T, hd); u: (BH, hd). Exact recurrence, fp32."""
+    bh, t, hd = r.shape
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                      # (BH, hd)
+        kv = kt[:, :, None] * vt[:, None, :]      # (BH, hd, hd)
+        out = jnp.einsum("bk,bkv->bv", rt, S + u[:, :, None] * kv)
+        return wt[:, :, None] * S + kv, out
+
+    xs = tuple(x.transpose(1, 0, 2) for x in (r, k, v, w))
+    S0 = jnp.zeros((bh, hd, hd), jnp.float32)
+    _, outs = lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2)

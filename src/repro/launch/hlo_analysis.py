@@ -1,0 +1,160 @@
+"""Compiled-HLO analysis: collective-byte accounting with loop correction.
+
+``compiled.cost_analysis()`` (and a naive text scan) counts a while-loop
+body ONCE regardless of trip count (verified: see EXPERIMENTS.md §Dry-run
+notes). ``collective_bytes_corrected`` recovers trip counts from the loop
+condition constants and multiplies in-loop collectives accordingly —
+validated against a hand-computable nested-scan module in tests.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device output bytes of every collective op in the module.
+    ``-done`` ops are skipped (the ``-start`` carries the shape)."""
+    out = {k: 0.0 for k in COLLECTIVES}
+    count = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+        count[kind] += 1
+    out["total"] = float(sum(out[k] for k in COLLECTIVES))
+    out["counts"] = count  # type: ignore
+    return out
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    name, buf = None, []
+    for line in text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            name, buf = m.group(1), []
+            comps[name] = buf
+            continue
+        if name is not None:
+            if line.strip() == "}":
+                name = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def collective_bytes_corrected(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware collective accounting.
+
+    XLA counts a while body once in the module text; real execution runs it
+    trip-count times. Trip counts are recovered from the loop-condition
+    constants (scan lowers to `compare(iv, constant(N))`), and collectives
+    inside a body are multiplied by the product of enclosing trip counts.
+    """
+    comps = _split_computations(hlo_text)
+    # map body -> trip count (max constant in its condition computation)
+    body_trips: Dict[str, int] = {}
+    calls: Dict[str, list] = {}           # computation -> [body names called]
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, ())))]
+                body_trips[body] = max(consts) if consts else 1
+                calls.setdefault(cname, []).append(body)
+
+    # multiplier per computation = product of trip counts on the call path
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for body in calls.get(name, ()):
+            visit(body, m * body_trips.get(body, 1))
+
+    # roots = computations that are not while bodies (entry + helpers)
+    for entry in list(comps):
+        if entry not in body_trips:
+            visit(entry, 1.0)
+
+    out = {k: 0.0 for k in COLLECTIVES}
+    raw = {k: 0.0 for k in COLLECTIVES}
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0)
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om or "-done(" in line:
+                continue
+            b = _shape_bytes(om.group(1))
+            out[om.group(2)] += b * m
+            raw[om.group(2)] += b
+    out["total"] = float(sum(out[k] for k in COLLECTIVES))
+    out["total_raw"] = float(sum(raw[k] for k in COLLECTIVES))
+    return out
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "peak_bytes": float(ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes
+                            - ma.alias_size_in_bytes),
+    }
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}

@@ -1,0 +1,220 @@
+"""Training driver: step builder + fault-tolerant loop + CLI.
+
+``make_train_step`` builds the jit'd step with explicit in/out shardings
+(params/opt donated), microbatch gradient accumulation via lax.scan, and
+the colibri-dispatch MoE path when the arch calls for it.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data import SyntheticPipeline
+from repro.distributed import (EventCoordinator, Policy, make_policy,
+                               param_specs, shardings_of)
+from repro.models import build
+
+Params = Any
+
+
+def batch_shardings(batch_like, policy: Policy):
+    if policy.mesh is None:
+        return None
+    dp = policy.dp_axes if len(policy.dp_axes) > 1 else policy.dp_axes[0]
+
+    def leaf(x):
+        spec = [None] * x.ndim
+        if x.ndim >= 1 and x.shape[0] % policy.dp_size == 0 and x.shape[0] > 0:
+            spec[0] = dp
+        return NamedSharding(policy.mesh, P(*spec))
+    return jax.tree.map(leaf, batch_like)
+
+
+def make_loss_fn(model, policy: Policy):
+    def loss_fn(params, batch):
+        return model.loss(params, batch, policy)
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: optim.AdamWConfig, policy: Policy,
+                    accum_steps: int = 1, grad_accum_dtype: str = "float32"):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, policy)
+    acc_dt = jnp.dtype(grad_accum_dtype)
+
+    def split_micro(batch):
+        def leaf(x):
+            b = x.shape[0]
+            return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+        return jax.tree.map(leaf, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(acc_dt), acc, g)
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, (losses, ms) = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        params, opt_state, opt_metrics = optim.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, params_like, opt_like, batch_like,
+                   policy: Policy):
+    """jit with explicit shardings + donation (the production entry)."""
+    if policy.mesh is None:
+        return jax.jit(train_step, donate_argnums=(0, 1))
+    pspecs = param_specs(params_like, policy)
+    pshard = shardings_of(pspecs, policy.mesh)
+    oshard = opt_state_shardings(opt_like, params_like, policy)
+    return jax.jit(
+        train_step,
+        in_shardings=(pshard, oshard, batch_shardings(batch_like, policy)),
+        donate_argnums=(0, 1),
+    )
+
+
+def opt_state_shardings(opt_like, params_like, policy: Policy):
+    """Moments shard exactly like their parameter; int8 scale tensors drop
+    the (quantized) last axis spec. (PartitionSpec is a tuple subclass, so
+    all traversal uses explicit is_leaf / flatten_up_to.)"""
+    pspecs = param_specs(params_like, policy)
+    is_p = lambda x: isinstance(x, P)
+    leaves, tdef = jax.tree_util.tree_flatten(pspecs, is_leaf=is_p)
+
+    def shard_of(spec, st):
+        if isinstance(st, tuple):                # (q, scale) int8 pair
+            scale_spec = P(*(list(spec)[:-1] + [None])) if len(spec) else spec
+            return (NamedSharding(policy.mesh, spec),
+                    NamedSharding(policy.mesh, scale_spec))
+        return NamedSharding(policy.mesh, spec)
+
+    def match(state_tree):
+        parts = tdef.flatten_up_to(state_tree)
+        return tdef.unflatten([shard_of(s, st)
+                               for s, st in zip(leaves, parts)])
+
+    return optim.AdamWState(NamedSharding(policy.mesh, P()),
+                            match(opt_like.m), match(opt_like.v))
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant training loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainRun:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    mesh: Optional[Mesh] = None
+    opt: optim.AdamWConfig = dataclasses.field(default_factory=optim.AdamWConfig)
+    log_every: int = 10
+
+
+def run_training(run: TrainRun, resume: bool = True,
+                 crash_at: Optional[int] = None) -> Dict[str, float]:
+    """The end-to-end driver. ``crash_at`` simulates a mid-run failure for
+    the fault-tolerance integration test."""
+    cfg = run.cfg
+    policy = make_policy(run.mesh, cfg)
+    model = build(cfg)
+    opt_cfg = dataclasses.replace(
+        run.opt, state_dtype=cfg.parallel.opt_state_dtype,
+        total_steps=max(run.steps, 10))
+    pipeline = SyntheticPipeline(cfg, run.shape)
+    coordinator = EventCoordinator()
+    ckpt = Checkpointer(run.ckpt_dir, coordinator) if run.ckpt_dir else None
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = optim.init(opt_cfg, params)
+    start_step = 0
+    if ckpt is not None and resume:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            state = ckpt.restore(latest, {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = latest
+    step_fn = make_train_step(model, opt_cfg, policy,
+                              cfg.parallel.accum_steps)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    metrics = {}
+    t0 = time.time()
+    for step in range(start_step, run.steps):
+        if crash_at is not None and step == crash_at:
+            if ckpt:
+                ckpt.wait()
+            raise RuntimeError(f"simulated failure at step {step}")
+        batch = pipeline.batch(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if ckpt is not None and (step + 1) % run.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        if (step + 1) % run.log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            rate = (step + 1 - start_step) / (time.time() - t0)
+            print(f"step {step+1:5d} loss={m['loss']:.4f} "
+                  f"acc={m.get('acc', 0):.3f} gnorm={m['grad_norm']:.2f} "
+                  f"({rate:.2f} it/s)")
+    if ckpt is not None:
+        ckpt.save(run.steps, {"params": params, "opt": opt_state}, wait=True)
+    out = {k: float(v) for k, v in metrics.items()}
+    out["params"] = params
+    out["opt_state"] = opt_state
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config + tiny shape (CPU)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    name = args.arch + ("-smoke" if args.smoke else "")
+    cfg = get_config(name)
+    shape = SHAPES[args.shape]
+    if args.smoke:
+        shape = ShapeSpec("smoke", 128, 4, "train")
+    run = TrainRun(cfg=cfg, shape=shape, steps=args.steps,
+                   ckpt_dir=args.ckpt_dir,
+                   opt=optim.AdamWConfig(lr=args.lr))
+    out = run_training(run)
+    print({k: v for k, v in out.items() if isinstance(v, float)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model_zoo import Model, build, input_specs, make_batch
+
+__all__ = ["Model", "build", "input_specs", "make_batch"]

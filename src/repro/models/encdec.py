@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, 1500, d) as the encoder input.
+Decoder positions use sinusoidal embeddings (real whisper uses learned —
+documented deviation, FLOP-neutral) so the same checkpoint serves any
+decoder length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Policy
+from repro.models import attention as A
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _enc_block_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = L.split(key, 2)
+    return {"norm1": L.layernorm_init(cfg.d_model, dtype),
+            "attn": A.cross_attn_init(k1, cfg, dtype),   # MHA layout (wq/wk/wv/wo)
+            "norm2": L.layernorm_init(cfg.d_model, dtype),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def _dec_block_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = L.split(key, 3)
+    return {"norm1": L.layernorm_init(cfg.d_model, dtype),
+            "self_attn": A.gqa_init(k1, cfg, dtype),
+            "norm_x": L.layernorm_init(cfg.d_model, dtype),
+            "cross_attn": A.cross_attn_init(k2, cfg, dtype),
+            "norm2": L.layernorm_init(cfg.d_model, dtype),
+            "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    e = cfg.encoder
+    ks = L.split(key, 6)
+    enc_keys = L.split(ks[0], e.num_layers)
+    dec_keys = L.split(ks[1], cfg.num_layers)
+    return {
+        "pos_embed": (jax.random.normal(ks[2], (e.seq_len, cfg.d_model),
+                                        jnp.float32) * 0.01).astype(dtype),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": L.layernorm_init(cfg.d_model, dtype),
+        "embed": L.embed_init(ks[3], cfg.vocab_size, cfg.d_model, dtype),
+        "segments": [jax.vmap(lambda k: {"u0": _dec_block_init(k, cfg, dtype)}
+                              )(dec_keys)],
+        "final_norm": L.layernorm_init(cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params: Params, feats, policy: Policy):
+    """feats: (B, Se, d) precomputed frame embeddings (frontend stub)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = feats.astype(cdt) + params["pos_embed"].astype(cdt)[None]
+
+    def body(xx, p):
+        h = L.layernorm(p["norm1"], xx, cfg.norm_eps)
+        b, s, _ = xx.shape
+        hd, nh = cfg.resolved_head_dim, cfg.num_heads
+        q = (h @ p["attn"]["wq"]).reshape(b, s, nh, hd)
+        k = (h @ p["attn"]["wk"]).reshape(b, s, nh, hd)
+        v = (h @ p["attn"]["wv"]).reshape(b, s, nh, hd)
+        a = A.blocked_attention(q, k, v, causal=False)
+        xx = xx + a.reshape(b, s, -1) @ p["attn"]["wo"]
+        h = L.layernorm(p["norm2"], xx, cfg.norm_eps)
+        return xx + L.mlp_apply(p["mlp"], h, "gelu"), None
+
+    body_fn = jax.checkpoint(body) if cfg.parallel.remat else body
+    x, _ = lax.scan(lambda c, p: (body_fn(c, p)[0], None), x,
+                    params["enc_blocks"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (train / prefill path)
+# ---------------------------------------------------------------------------
+
+def _dec_block(cfg, p, x, enc, positions, policy):
+    h = L.layernorm(p["norm1"], x, cfg.norm_eps)
+    a, _ = A.gqa_apply(cfg, p["self_attn"], h, positions, causal=True,
+                       rope=False)
+    x = x + a
+    h = L.layernorm(p["norm_x"], x, cfg.norm_eps)
+    a, _ = A.cross_attn_apply(cfg, p["cross_attn"], h, enc=enc)
+    x = x + a
+    h = L.layernorm(p["norm2"], x, cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h, "gelu")
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, feats, policy: Policy):
+    """tokens: (B,S) decoder input; feats: (B,Se,d). Returns (hidden, aux=0)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    enc = encode(cfg, params, feats, policy)
+    b, s = tokens.shape
+    pos_sin = L.sinusoidal_positions(s, cfg.d_model).astype(cdt)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt) + pos_sin[None]
+    positions = jnp.arange(s)
+
+    def body(xx, p):
+        return _dec_block(cfg, p["u0"], xx, enc, positions, policy), None
+
+    body_fn = jax.checkpoint(body) if cfg.parallel.remat else body
+    x, _ = lax.scan(lambda c, p: (body_fn(c, p)[0], None), x,
+                    params["segments"][0])
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with self-KV cache and precomputed cross-KV
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype) -> Params:
+    hd, nh = cfg.resolved_head_dim, cfg.num_heads
+    ld = cfg.num_layers
+    se = cfg.encoder.seq_len
+    return {
+        "self": {"k": jnp.zeros((ld, batch, seq, cfg.num_kv_heads, hd), dtype),
+                 "v": jnp.zeros((ld, batch, seq, cfg.num_kv_heads, hd), dtype)},
+        "cross": {"k": jnp.zeros((ld, batch, se, nh, hd), dtype),
+                  "v": jnp.zeros((ld, batch, se, nh, hd), dtype)},
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, feats, cache_len: int,
+            policy: Policy, cache_dtype=None):
+    """Encode audio, run the prompt through the decoder, fill caches."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cache_dtype = cache_dtype or cdt
+    enc = encode(cfg, params, feats, policy)
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, cache_len, cache_dtype)
+    pos_sin = L.sinusoidal_positions(s, cfg.d_model).astype(cdt)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt) + pos_sin[None]
+    positions = jnp.arange(s)
+
+    def body(xx, xs):
+        p = xs["u0"] if "u0" in xs else xs
+        h = L.layernorm(p["norm1"], xx, cfg.norm_eps)
+        a, kv = A.gqa_apply(cfg, p["self_attn"], h, positions, causal=True,
+                            rope=False, kv_out=True)
+        xx = xx + a
+        h = L.layernorm(p["norm_x"], xx, cfg.norm_eps)
+        a, ckv = A.cross_attn_apply(cfg, p["cross_attn"], h, enc=enc)
+        xx = xx + a
+        h = L.layernorm(p["norm2"], xx, cfg.norm_eps)
+        xx = xx + L.mlp_apply(p["mlp"], h, "gelu")
+        return xx, {"self_k": kv[0].astype(cache_dtype),
+                    "self_v": kv[1].astype(cache_dtype),
+                    "cross_k": ckv[0].astype(cache_dtype),
+                    "cross_v": ckv[1].astype(cache_dtype)}
+
+    x, ys = lax.scan(body, x, params["segments"][0])
+    cache["self"]["k"] = lax.dynamic_update_slice(
+        cache["self"]["k"], ys["self_k"], (0, 0, 0, 0, 0))
+    cache["self"]["v"] = lax.dynamic_update_slice(
+        cache["self"]["v"], ys["self_v"], (0, 0, 0, 0, 0))
+    cache["cross"]["k"] = ys["cross_k"]
+    cache["cross"]["v"] = ys["cross_v"]
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens, pos,
+                policy: Policy):
+    """tokens: (B,1); pos: (B,). Cross-KV must be prefilled."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = tokens.shape[0]
+    hd, nh = cfg.resolved_head_dim, cfg.num_heads
+    # sinusoidal position for the current step
+    d = cfg.d_model
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((b, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(
+        jnp.cos(ang[:, : (d + 1) // 2]))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt) + \
+        pe[:, None].astype(cdt)
+
+    def body(xx, xs):
+        p, sk, sv, ck, cv = xs
+        p = p["u0"]
+        h = L.layernorm(p["norm1"], xx, cfg.norm_eps)
+        a, newc = A.gqa_decode(cfg, p["self_attn"], h, {"k": sk, "v": sv},
+                               pos, rope=False)
+        xx = xx + a
+        h = L.layernorm(p["norm_x"], xx, cfg.norm_eps)
+        q = (h @ p["cross_attn"]["wq"]).reshape(b, 1, nh, hd)
+        a = A.decode_attention(q, ck, cv,
+                               jnp.full((b,), ck.shape[1] - 1, jnp.int32))
+        xx = xx + a.reshape(b, 1, -1) @ p["cross_attn"]["wo"]
+        h = L.layernorm(p["norm2"], xx, cfg.norm_eps)
+        xx = xx + L.mlp_apply(p["mlp"], h, "gelu")
+        return xx, (newc["k"], newc["v"])
+
+    x, (nk, nv) = lax.scan(body, x, (params["segments"][0],
+                                     cache["self"]["k"], cache["self"]["v"],
+                                     cache["cross"]["k"], cache["cross"]["v"]))
+    new_cache = {"self": {"k": nk, "v": nv}, "cross": cache["cross"]}
+    x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T  # whisper ties embeddings
+    return (x @ head.astype(x.dtype)).astype(jnp.float32), new_cache

@@ -1,0 +1,178 @@
+"""Shared neural-net layers (pure JAX, explicit param pytrees).
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays. Multi-layer stacks carry a leading
+  layer axis and are consumed by ``lax.scan``.
+* Math runs in ``compute_dtype`` (bf16 by default); norms, softmax and
+  recurrent states run in fp32.
+* No sharding in this module — sharding is applied by
+  ``repro.distributed.sharding`` via param-path rules and an activation
+  ``Policy`` object (see model_zoo).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split(key, n: int):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype) -> Params:
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p: Params, x, eps: float = 1e-5):
+    return rmsnorm(p, x, eps) if kind == "rmsnorm" else layernorm(p, x, eps)
+
+
+def groupnorm(x: jnp.ndarray, scale, bias, num_groups: int, eps: float = 64e-5):
+    """GroupNorm over the last dim (rwkv6 output norm; eps follows rwkv)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, d)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    if act == "silu":                     # gated (SwiGLU)
+        k1, k2, k3 = split(key, 3)
+        return {"w_gate": dense_init(k1, d, d_ff, dtype),
+                "w_up": dense_init(k2, d, d_ff, dtype),
+                "w_down": dense_init(k3, d_ff, d, dtype)}
+    k1, k2 = split(key, 2)                # plain GELU MLP (whisper / gelu archs)
+    return {"w_up": dense_init(k1, d, d_ff, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(k2, d_ff, d, dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        g = jax.nn.silu(x @ p["w_gate"])
+        return (g * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
+    return h @ p["w_down"] + p["b_down"]
+
+
+def geglu_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Gated GELU (recurrentgemma MLP) — reuses the silu param layout."""
+    g = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(rot_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rotary_frac: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    freqs = rope_frequencies(rot, theta)                       # (rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]           # rotate-half layout
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((max_len, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean token CE in fp32 with optional z-loss. labels == -1 is masked.
+
+    Returns (loss, accuracy)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(lf, -1) == labels) * mask).sum() / denom
+    return loss, acc

@@ -1,0 +1,141 @@
+"""Unified model API: ``build(cfg)`` → Model with init / loss / serve entry
+points, plus ``input_specs()`` (ShapeDtypeStruct stand-ins — weak-type
+correct, shardable, no device allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import Policy
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- init ----
+    def init(self, key) -> Params:
+        if self.cfg.encoder is not None:
+            return ED.init_params(self.cfg, key)
+        return TF.init_params(self.cfg, key)
+
+    # ---- training / prefill ----
+    def hidden(self, params, batch: Dict[str, Any], policy: Policy):
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return ED.forward(cfg, params, batch["tokens"],
+                              batch["encoder_feats"], policy)
+        return TF.forward(cfg, params, batch["tokens"], policy,
+                          patch_embeds=batch.get("patch_embeds"))
+
+    def loss(self, params, batch, policy: Policy
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        h, aux = self.hidden(params, batch, policy)
+        loss, acc = TF.loss_fn(cfg, params, h, batch["labels"])
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_weight * aux
+        return loss, {"loss": loss, "acc": acc, "aux": aux}
+
+    def logits(self, params, batch, policy: Policy):
+        h, _ = self.hidden(params, batch, policy)
+        return TF.logits(self.cfg, params, h)
+
+    # ---- serving ----
+    def init_cache(self, batch: int, seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.compute_dtype)
+        if cfg.encoder is not None:
+            return ED.init_cache(cfg, batch, seq, dtype)
+        return TF.init_cache(cfg, batch, seq, dtype)
+
+    def prefill(self, params, batch, cache_len: int, policy: Policy):
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return ED.prefill(cfg, params, batch["tokens"],
+                              batch["encoder_feats"], cache_len, policy)
+        return TF.prefill(cfg, params, batch["tokens"], cache_len, policy,
+                          patch_embeds=batch.get("patch_embeds"))
+
+    def decode_step(self, params, cache, tokens, pos, policy: Policy):
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return ED.decode_step(cfg, params, cache, tokens, pos, policy)
+        return TF.decode_step(cfg, params, cache, tokens, pos, policy)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins) & synthetic batches (smoke tests)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = cfg.compute_dtype
+    if shape.kind == "train":
+        out = {"tokens": _sds((b, s), jnp.int32),
+               "labels": _sds((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+    else:                                   # decode: one token + cache of s
+        out = {"tokens": _sds((b, 1), jnp.int32),
+               "pos": _sds((b,), jnp.int32)}
+    if cfg.frontend == "audio":
+        out["encoder_feats"] = _sds((b, cfg.encoder.seq_len, cfg.d_model), cdt)
+    if cfg.frontend == "vlm" and shape.kind != "decode":
+        out["patch_embeds"] = _sds((b, cfg.num_patches, cfg.d_model), cdt)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """ShapeDtypeStruct pytree for the decode cache of this cell."""
+    model = build(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    return cache_shape
+
+
+def param_specs_shapes(cfg: ModelConfig) -> Params:
+    """Abstract param pytree (eval_shape of init — no allocation)."""
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, key) -> Dict[str, Any]:
+    """Concrete random batch (smoke tests / examples)."""
+    b, s = shape.global_batch, shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        toks = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+        out = {"tokens": toks,
+               "labels": jnp.roll(toks, -1, axis=1)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size)}
+    else:
+        out = {"tokens": jax.random.randint(k1, (b, 1), 0, cfg.vocab_size),
+               "pos": jnp.full((b,), s // 2, jnp.int32)}
+    if cfg.frontend == "audio":
+        out["encoder_feats"] = jax.random.normal(
+            k2, (b, cfg.encoder.seq_len, cfg.d_model), cdt) * 0.02
+    if cfg.frontend == "vlm" and shape.kind != "decode":
+        out["patch_embeds"] = jax.random.normal(
+            k3, (b, cfg.num_patches, cfg.d_model), cdt) * 0.02
+    return out

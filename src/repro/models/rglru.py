@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma).
+
+Recurrence (per channel, fp32):
+    r_t = σ(α_r ⊙ y_t + β_r)                  (recurrence gate)
+    i_t = σ(α_i ⊙ y_t + β_i)                  (input gate)
+    log a_t = -c · softplus(Λ) ⊙ r_t          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ y_t)
+
+Train/prefill uses ``lax.associative_scan`` (log-depth parallel scan);
+decode is a single fused step. State: h (B,w) + conv1d tail (B,3,w) —
+O(1) in sequence length ⇒ this arch runs long_500k.
+
+Note: the gates here are per-channel affine (element-wise); Griffin uses
+block-diagonal linear gates. Documented simplification — FLOP-negligible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+C_RGLRU = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv1d_width
+    ks = L.split(key, 6)
+    return {
+        "w_in": L.dense_init(ks[0], d, w, dtype),
+        "w_gate": L.dense_init(ks[1], d, w, dtype),       # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], (cw, w), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "alpha_r": jnp.zeros((w,), jnp.float32),
+        "beta_r": jnp.zeros((w,), jnp.float32),
+        "alpha_i": jnp.zeros((w,), jnp.float32),
+        "beta_i": jnp.zeros((w,), jnp.float32),
+        # Λ init so a ≈ 0.9..0.999 at r=1
+        "lam": (jax.random.uniform(ks[3], (w,), jnp.float32) * 2.0 + 2.0),
+        "w_proj": L.dense_init(ks[4], w, d, dtype),
+    }
+
+
+def _conv1d_causal(y, conv_w, conv_b, tail=None):
+    """Causal depthwise conv. y: (B,S,w); tail: (B,cw-1,w) carried state."""
+    cw = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((y.shape[0], cw - 1, y.shape[2]), y.dtype)
+    ypad = jnp.concatenate([tail.astype(y.dtype), y], axis=1)
+    out = sum(ypad[:, i: i + y.shape[1]] * conv_w[i] for i in range(cw))
+    new_tail = ypad[:, -(cw - 1):] if cw > 1 else tail
+    return out + conv_b, new_tail
+
+
+def _gates(p, y32):
+    r = jax.nn.sigmoid(p["alpha_r"] * y32 + p["beta_r"])
+    i = jax.nn.sigmoid(p["alpha_i"] * y32 + p["beta_i"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * y32)
+    return a, x_in
+
+
+def rglru_apply(cfg: ModelConfig, p: Params, x, state: Params
+                ) -> Tuple[jnp.ndarray, Params]:
+    """x: (B,S,d) -> (out, new_state). state = {"h": (B,w), "conv": (B,cw-1,w)}."""
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    y, new_tail = _conv1d_causal(x @ p["w_in"], p["conv_w"], p["conv_b"],
+                                 state["conv"])
+    y32 = y.astype(jnp.float32)
+    a, x_in = _gates(p, y32)
+    # prepend carried state as a pseudo-step: h_0 absorbed via (a_0=1? no):
+    # run assoc scan on the sequence then blend h_prev with the prefix decay.
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    a_cum, h_seq = lax.associative_scan(combine, (a, x_in), axis=1)
+    h = h_seq + a_cum * state["h"][:, None]           # inject carried state
+    out = (h.astype(x.dtype) * gate) @ p["w_proj"]
+    return out, {"h": h[:, -1], "conv": new_tail}
+
+
+def rglru_decode(cfg: ModelConfig, p: Params, x, state: Params):
+    """x: (B,1,d) single step."""
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    y, new_tail = _conv1d_causal(x @ p["w_in"], p["conv_w"], p["conv_b"],
+                                 state["conv"])
+    y32 = y[:, 0].astype(jnp.float32)
+    a, x_in = _gates(p, y32)
+    h = a * state["h"] + x_in
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_proj"]
+    return out, {"h": h, "conv": new_tail}
+
+
+def state_init(cfg: ModelConfig, batch: int) -> Params:
+    w = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv1d_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), jnp.float32)}

@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The jnp model path uses the exact sequential recurrence (``lax.scan`` over
+time — one HLO body regardless of S, exact for both train and decode). The
+chunked-parallel formulation lives in ``repro.kernels.rwkv6_wkv`` (TPU hot
+path) and is validated against this recurrence.
+
+State per layer: token-shift (last input) for time-mix and channel-mix, and
+the per-head wkv matrix S ∈ R^{hd×hd} — O(1) in sequence length, which is
+why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+LORA_RANK = 64
+
+
+def time_mix_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    ks = L.split(key, 10)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "w_r": L.dense_init(ks[1], d, d, dtype),
+        "w_k": L.dense_init(ks[2], d, d, dtype),
+        "w_v": L.dense_init(ks[3], d, d, dtype),
+        "w_g": L.dense_init(ks[4], d, d, dtype),
+        "w_o": L.dense_init(ks[5], d, d, dtype),
+        "w0": (jax.random.normal(ks[6], (d,), jnp.float32) - 5.0).astype(jnp.float32),
+        "w_lora_a": L.dense_init(ks[7], d, LORA_RANK, dtype),
+        "w_lora_b": L.dense_init(ks[8], LORA_RANK, d, dtype, scale=0.1),
+        "u": (jax.random.normal(ks[9], (h, hd), jnp.float32) * 0.1).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def channel_mix_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = L.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d), jnp.float32).astype(dtype),
+        "w_k": L.dense_init(ks[1], d, f, dtype),
+        "w_v": L.dense_init(ks[2], f, d, dtype),
+        "w_r": L.dense_init(ks[0], d, d, dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: value of the previous timestep. x: (B,S,d);
+    x_prev: (B,d) carry from the previous segment/step."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u):
+    """Exact wkv recurrence. r,k,v,w: (B,S,H,hd) fp32; u: (H,hd).
+    Returns (out (B,S,H,hd), final_state (B,H,hd,hd))."""
+    b, s, h, hd = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                          # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)      # outer product
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    S_fin, outs = lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2, 3), S_fin
+
+
+def time_mix_apply(cfg: ModelConfig, p: Params, x, shift_state, wkv_state
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d). Returns (out, new_shift (B,d), new_wkv (B,H,hd,hd))."""
+    b, s, d = x.shape
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    xp = _shift(x, shift_state)
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + (xp - x) * mu[i]
+    r = (mix(0) @ p["w_r"]).reshape(b, s, h, hd).astype(jnp.float32)
+    k = (mix(1) @ p["w_k"]).reshape(b, s, h, hd).astype(jnp.float32)
+    v = (mix(2) @ p["w_v"]).reshape(b, s, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(mix(3) @ p["w_g"])
+    # data-dependent decay (the "Finch" feature)
+    wln = p["w0"] + (jnp.tanh(mix(4) @ p["w_lora_a"]) @ p["w_lora_b"]
+                     ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wln)).reshape(b, s, h, hd)   # in (0,1)
+    out, S_fin = _wkv_scan(r, k, v, w, p["u"])
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = L.groupnorm(out, p["gn_scale"], p["gn_bias"], num_groups=h)
+    out = (out * g) @ p["w_o"]
+    return out, x[:, -1], S_fin
+
+
+def time_mix_decode(cfg: ModelConfig, p: Params, x, shift_state, wkv_state):
+    """Single-token step. x: (B,1,d); wkv_state: (B,H,hd,hd) fp32."""
+    b, _, d = x.shape
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    xp = shift_state[:, None]
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + (xp - x) * mu[i]
+    r = (mix(0) @ p["w_r"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (mix(1) @ p["w_k"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (mix(2) @ p["w_v"]).reshape(b, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(mix(3) @ p["w_g"])
+    wln = p["w0"] + (jnp.tanh(mix(4) @ p["w_lora_a"]) @ p["w_lora_b"]
+                     ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wln)).reshape(b, h, hd)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, wkv_state + p["u"][None, :, :, None] * kv)
+    S_new = w[..., None] * wkv_state + kv
+    out = out.reshape(b, 1, d).astype(x.dtype)
+    out = L.groupnorm(out, p["gn_scale"], p["gn_bias"], num_groups=h)
+    out = (out * g) @ p["w_o"]
+    return out, x[:, -1], S_new
+
+
+def channel_mix_apply(p: Params, x, shift_state):
+    xp = _shift(x, shift_state)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xp - x) * mu[0]
+    xr = x + (xp - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1]
+
+
+def channel_mix_decode(p: Params, x, shift_state):
+    xp = shift_state[:, None]
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xp - x) * mu[0]
+    xr = x + (xp - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1]
+
+
+def state_init(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    hd = cfg.recurrent.head_dim
+    h = d // hd
+    return {"shift_tm": jnp.zeros((batch, d), jnp.float32),
+            "shift_cm": jnp.zeros((batch, d), jnp.float32),
+            "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32)}

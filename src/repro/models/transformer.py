@@ -1,0 +1,476 @@
+"""Decoder-only LM assembly: heterogeneous block stacks under lax.scan.
+
+Layers are grouped into *segments* — maximal runs where the block-pattern
+unit repeats — and each segment's params are stacked along a leading axis
+and consumed by ``lax.scan`` (O(1) HLO in depth: an 88-layer model compiles
+the same graph size as a 2-layer one). recurrentgemma's (rglru,rglru,local)
+unit scans as a super-block; MoE models scan dense and MoE segments
+separately.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Policy
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MoE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RW
+
+Params = Dict[str, Any]
+LayerSig = Tuple[str, str]          # (mix_kind, ffn_kind)
+
+
+# ---------------------------------------------------------------------------
+# Layer planning
+# ---------------------------------------------------------------------------
+
+def layer_sigs(cfg: ModelConfig) -> List[LayerSig]:
+    sigs = []
+    for i, kind in enumerate(cfg.layer_kinds()):
+        if kind == "rwkv":
+            ffn = "rwkv_cm"
+        elif cfg.moe is not None:
+            ffn = "moe" if i >= cfg.moe.moe_layer_start else "dense"
+        else:
+            ffn = "mlp"
+        sigs.append((kind, ffn))
+    return sigs
+
+
+def plan_segments(cfg: ModelConfig) -> List[Tuple[Tuple[LayerSig, ...], int]]:
+    """[(unit, repeats), ...] — maximal cyclic runs."""
+    sigs = layer_sigs(cfg)
+    p = len(cfg.block_pattern)
+    segs: List[Tuple[Tuple[LayerSig, ...], int]] = []
+    i, n = 0, len(sigs)
+    while i < n:
+        if p > 1 and n - i >= p:
+            unit = tuple(sigs[i: i + p])
+            k = 1
+            while i + (k + 1) * p <= n and tuple(sigs[i + k * p: i + (k + 1) * p]) == unit:
+                k += 1
+            if k > 1:
+                segs.append((unit, k))
+                i += k * p
+                continue
+        j = i
+        while j < n and sigs[j] == sigs[i]:
+            j += 1
+        segs.append(((sigs[i],), j - i))
+        i = j
+    return segs
+
+
+def mlp_kind(cfg: ModelConfig) -> str:
+    if cfg.act == "silu":
+        return "swiglu"
+    return "geglu" if cfg.norm == "rmsnorm" else "gelu"
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _ffn_init(key, cfg: ModelConfig, ffn: str, dtype) -> Params:
+    mk = mlp_kind(cfg)
+    if ffn == "mlp":
+        return {"mlp": L.mlp_init(key, cfg.d_model, cfg.d_ff,
+                                  "silu" if mk != "gelu" else "gelu", dtype)}
+    if ffn == "dense":
+        return {"mlp": L.mlp_init(key, cfg.d_model, cfg.moe.dense_d_ff,
+                                  "silu", dtype)}
+    if ffn == "moe":
+        k1, k2 = L.split(key, 2)
+        return {"moe": MoE.moe_init(k1, cfg, dtype),
+                "shared": MoE.shared_init(k2, cfg, dtype)}
+    if ffn == "rwkv_cm":
+        return {"cm": RW.channel_mix_init(key, cfg, dtype)}
+    raise ValueError(ffn)
+
+
+def block_init(key, cfg: ModelConfig, sig: LayerSig, dtype) -> Params:
+    mix, ffn = sig
+    k1, k2 = L.split(key, 2)
+    p: Params = {"norm1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+                 "norm2": L.norm_init(cfg.norm, cfg.d_model, dtype)}
+    if mix == "attn" and cfg.attn_kind == "mla":
+        p["attn"] = A.mla_init(k1, cfg, dtype)
+    elif mix in ("attn", "local"):
+        p["attn"] = A.gqa_init(k1, cfg, dtype)
+    elif mix == "rglru":
+        p["rglru"] = RG.rglru_init(k1, cfg, dtype)
+    elif mix == "rwkv":
+        p["rwkv"] = RW.time_mix_init(k1, cfg, dtype)
+    p.update(_ffn_init(k2, cfg, ffn, dtype))
+    return p
+
+
+def _ffn_apply(cfg: ModelConfig, sig: LayerSig, p: Params, h, policy: Policy,
+               shift_cm=None):
+    """Returns (y, aux, new_shift_cm)."""
+    mix, ffn = sig
+    zero = jnp.zeros((), jnp.float32)
+    if ffn == "moe":
+        y, aux = MoE.moe_apply(cfg, p["moe"], h, policy)
+        y = y + L.mlp_apply(p["shared"], h, "silu")
+        return y, aux, None
+    if ffn == "rwkv_cm":
+        st = shift_cm if shift_cm is not None else jnp.zeros(
+            (h.shape[0], h.shape[2]), jnp.float32)
+        y, new_st = RW.channel_mix_apply(p["cm"], h, st.astype(h.dtype))
+        return y, zero, new_st
+    mk = mlp_kind(cfg)
+    if mk == "geglu":
+        return L.geglu_apply(p["mlp"], h), zero, None
+    return L.mlp_apply(p["mlp"], h, "silu" if mk == "swiglu" else "gelu"), zero, None
+
+
+def _sp(policy: Policy, x):
+    """Sequence-parallel residual: keep (B,S,d) sharded over (dp, model, -).
+    Per-token ops (norms, qkv/mlp matmuls) run on S-shards; the MLP double-
+    shards (S x f) and reduces 1/tp-sized partials — replacing two full
+    hidden-size all-reduces per layer with one 1/tp-sized one."""
+    if policy.mesh is None or not policy.sequence_parallel:
+        return x
+    dp = policy.dp_axes if len(policy.dp_axes) > 1 else policy.dp_axes[0]
+    return policy.constrain(x, dp, policy.tp_axis, None)
+
+
+def apply_block(cfg: ModelConfig, sig: LayerSig, p: Params, x, positions,
+                policy: Policy):
+    """Full-sequence (train/prefill, state-free). Returns (x, aux)."""
+    mix, _ = sig
+    x = _sp(policy, x)
+    h = L.norm_apply(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    b = x.shape[0]
+    if mix == "attn" and cfg.attn_kind == "mla":
+        a, _ = A.mla_apply(cfg, p["attn"], h, positions)
+    elif mix == "attn":
+        a, _ = A.gqa_apply(cfg, p["attn"], h, positions, causal=True,
+                           policy=policy)
+    elif mix == "local":
+        a, _ = A.gqa_apply(cfg, p["attn"], h, positions, causal=True,
+                           window=cfg.local_window, policy=policy)
+    elif mix == "rglru":
+        a, _ = RG.rglru_apply(cfg, p["rglru"], h, RG.state_init(cfg, b))
+    elif mix == "rwkv":
+        st = RW.state_init(cfg, b)
+        a, _, _ = RW.time_mix_apply(cfg, p["rwkv"], h,
+                                    st["shift_tm"].astype(h.dtype), st["wkv"])
+    else:
+        raise ValueError(mix)
+    x = _sp(policy, x + a)
+    h = L.norm_apply(cfg.norm, p["norm2"], x, cfg.norm_eps)
+    y, aux, _ = _ffn_apply(cfg, sig, p, h, policy)
+    return _sp(policy, x + y), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (stateful) block
+# ---------------------------------------------------------------------------
+
+def block_cache_init(cfg: ModelConfig, sig: LayerSig, batch: int, seq: int,
+                     dtype) -> Params:
+    mix, ffn = sig
+    c: Params = {}
+    if mix == "attn" and cfg.attn_kind == "mla":
+        c["attn"] = A.mla_cache_init(cfg, batch, seq, dtype)
+    elif mix == "attn":
+        c["attn"] = A.gqa_cache_init(cfg, batch, seq, dtype)
+    elif mix == "local":
+        c["attn"] = A.gqa_cache_init(cfg, batch, min(cfg.local_window, seq), dtype)
+    elif mix == "rglru":
+        c["rglru"] = RG.state_init(cfg, batch)
+    elif mix == "rwkv":
+        c["rwkv"] = RW.state_init(cfg, batch)
+    if ffn == "rwkv_cm":
+        c["cm_shift"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return c
+
+
+def apply_block_decode(cfg: ModelConfig, sig: LayerSig, p: Params, cache: Params,
+                       x, pos, policy: Policy):
+    """One-token step. x: (B,1,d); pos: (B,). Returns (x, new_cache)."""
+    mix, ffn = sig
+    h = L.norm_apply(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    newc: Params = {}
+    if mix == "attn" and cfg.attn_kind == "mla":
+        a, newc["attn"] = A.mla_decode(cfg, p["attn"], h, cache["attn"], pos)
+    elif mix == "attn":
+        a, newc["attn"] = A.gqa_decode(cfg, p["attn"], h, cache["attn"], pos)
+    elif mix == "local":
+        a, newc["attn"] = A.gqa_decode(cfg, p["attn"], h, cache["attn"], pos,
+                                       window=cfg.local_window)
+    elif mix == "rglru":
+        a, newc["rglru"] = RG.rglru_decode(cfg, p["rglru"], h, cache["rglru"])
+    elif mix == "rwkv":
+        st = cache["rwkv"]
+        a, new_shift, new_wkv = RW.time_mix_decode(
+            cfg, p["rwkv"], h, st["shift_tm"].astype(h.dtype), st["wkv"])
+        newc["rwkv"] = {"shift_tm": new_shift.astype(jnp.float32),
+                        "shift_cm": st["shift_cm"], "wkv": new_wkv}
+    x = x + a
+    h = L.norm_apply(cfg.norm, p["norm2"], x, cfg.norm_eps)
+    if ffn == "rwkv_cm":
+        y, new_cm = RW.channel_mix_decode(
+            p["cm"], h, newc["rwkv"]["shift_cm"].astype(h.dtype))
+        newc["rwkv"] = dict(newc["rwkv"], shift_cm=new_cm.astype(jnp.float32))
+        aux = None
+    else:
+        y, _, _ = _ffn_apply(cfg, sig, p, h, policy)
+    return x + y, newc
+
+
+def _fill_attn_cache(cache: Params, kv, window: int = 0) -> Params:
+    """Write prefill K/V (B,S,KV,hd) into a fresh cache (ring-buffered for
+    sliding-window layers)."""
+    k, v = kv
+    s = k.shape[1]
+    s_cache = cache["k"].shape[1]
+    if not window or s <= s_cache:
+        if s <= s_cache and not window:
+            return {"k": lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                    "v": lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))}
+    # ring buffer: keep the last s_cache positions at slot (pos % s_cache)
+    import numpy as np
+    take = min(s, s_cache)
+    gpos = np.arange(s - take, s)
+    slots = gpos % s_cache
+    return {"k": cache["k"].at[:, slots].set(k[:, gpos].astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, slots].set(v[:, gpos].astype(cache["v"].dtype))}
+
+
+def apply_block_prefill(cfg: ModelConfig, sig: LayerSig, p: Params,
+                        cache: Params, x, positions, policy: Policy):
+    """Full-sequence forward that also fills the decode cache."""
+    mix, ffn = sig
+    h = L.norm_apply(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    b, s, _ = x.shape
+    newc: Params = {}
+    if mix == "attn" and cfg.attn_kind == "mla":
+        a, (ckv, krope) = A.mla_apply(cfg, p["attn"], h, positions)
+        newc["attn"] = {
+            "c_kv": lax.dynamic_update_slice(
+                cache["attn"]["c_kv"], ckv.astype(cache["attn"]["c_kv"].dtype),
+                (0, 0, 0)),
+            "k_rope": lax.dynamic_update_slice(
+                cache["attn"]["k_rope"],
+                krope.astype(cache["attn"]["k_rope"].dtype), (0, 0, 0))}
+    elif mix == "attn":
+        a, kv = A.gqa_apply(cfg, p["attn"], h, positions, causal=True,
+                            kv_out=True, policy=policy)
+        newc["attn"] = _fill_attn_cache(cache["attn"], kv)
+    elif mix == "local":
+        a, kv = A.gqa_apply(cfg, p["attn"], h, positions, causal=True,
+                            window=cfg.local_window, kv_out=True,
+                            policy=policy)
+        newc["attn"] = _fill_attn_cache(cache["attn"], kv, cfg.local_window)
+    elif mix == "rglru":
+        a, newc["rglru"] = RG.rglru_apply(cfg, p["rglru"], h,
+                                          RG.state_init(cfg, b))
+    elif mix == "rwkv":
+        st = RW.state_init(cfg, b)
+        a, shift, wkv = RW.time_mix_apply(cfg, p["rwkv"], h,
+                                          st["shift_tm"].astype(h.dtype),
+                                          st["wkv"])
+        newc["rwkv"] = {"shift_tm": shift.astype(jnp.float32),
+                        "shift_cm": jnp.zeros((b, cfg.d_model), jnp.float32),
+                        "wkv": wkv}
+    x = x + a
+    h = L.norm_apply(cfg.norm, p["norm2"], x, cfg.norm_eps)
+    if ffn == "rwkv_cm":
+        y, new_cm = RW.channel_mix_apply(
+            p["cm"], h, jnp.zeros((b, cfg.d_model), h.dtype))
+        newc["rwkv"] = dict(newc["rwkv"], shift_cm=new_cm.astype(jnp.float32))
+    else:
+        y, _, _ = _ffn_apply(cfg, sig, p, h, policy)
+    return x + y, newc
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache_len: int,
+            policy: Policy, cache_dtype=None, patch_embeds=None):
+    """Process a prompt and return (hidden, filled cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cache_dtype = cache_dtype or cdt
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, cache_len, cache_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.frontend == "vlm" and patch_embeds is not None:
+        p_ = min(patch_embeds.shape[1], x.shape[1])
+        x = jnp.concatenate([patch_embeds[:, :p_].astype(cdt), x[:, p_:]],
+                            axis=1)
+    positions = jnp.arange(s)
+    new_caches = []
+    for (unit, _), seg_p, seg_c in zip(plan_segments(cfg), params["segments"],
+                                       cache):
+        def body(xx, xs):
+            lp, lc = xs
+            newc = {}
+            for j, sig in enumerate(unit):
+                xx, nc = apply_block_prefill(cfg, sig, lp[f"u{j}"],
+                                             lc[f"u{j}"], xx, positions, policy)
+                newc[f"u{j}"] = nc
+            return xx, newc
+        x, new_c = lax.scan(body, x, (seg_p, seg_c))
+        new_caches.append(new_c)
+    x = L.norm_apply(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward / decode
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    segs = plan_segments(cfg)
+    k_embed, k_head, k_blocks = L.split(key, 3)
+    params: Params = {"embed": L.embed_init(k_embed, cfg.vocab_size,
+                                            cfg.d_model, dtype),
+                      "final_norm": L.norm_init(cfg.norm, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                         dtype)
+    seg_params = []
+    keys = L.split(k_blocks, len(segs))
+    for (unit, repeats), sk in zip(segs, keys):
+        rkeys = L.split(sk, repeats)
+
+        def unit_init(k):
+            uks = L.split(k, len(unit))
+            return {f"u{j}": block_init(uks[j], cfg, unit[j], dtype)
+                    for j in range(len(unit))}
+        seg_params.append(jax.vmap(unit_init)(rkeys))
+    params["segments"] = seg_params
+    return params
+
+
+def _constrain_layer_params(policy: Policy, lp: Params) -> Params:
+    """Pin the per-layer param slice to its (FSDP-)sharded spec inside the
+    scan body, so XLA re-gathers per layer instead of hoisting a full-stack
+    all-gather out of the loop."""
+    if policy.mesh is None or not policy.fsdp:
+        return lp
+    from repro.distributed import sharding as SH
+
+    def leaf(path, x):
+        spec = SH.spec_for(SH._path_str(path), x.shape, policy, stacked=False)
+        return policy.constrain(x, *spec)
+    return jax.tree_util.tree_map_with_path(leaf, lp)
+
+
+def _seg_apply(cfg, unit, seg_p, x, positions, policy, remat: bool):
+    def body(carry, lp):
+        xx, aux = carry
+        lp = _constrain_layer_params(policy, lp)
+        for j, sig in enumerate(unit):
+            xx, a = apply_block(cfg, sig, lp[f"u{j}"], xx, positions, policy)
+            aux = aux + a
+        return (xx, aux), None
+    body_fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    (x, aux), _ = lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), seg_p)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, policy: Policy,
+            patch_embeds=None, positions=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B,S) -> (hidden (B,S,d), aux loss)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if cfg.frontend == "vlm" and patch_embeds is not None:
+        p = min(patch_embeds.shape[1], x.shape[1])
+        x = jnp.concatenate([patch_embeds[:, :p].astype(cdt), x[:, p:]], axis=1)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])
+    if policy.mesh is not None:
+        x = policy.constrain(x, *policy.batch_spec(3))   # (dp, None, None)
+    aux_total = jnp.zeros((), jnp.float32)
+    for (unit, _), seg_p in zip(plan_segments(cfg), params["segments"]):
+        x, aux = _seg_apply(cfg, unit, seg_p, x, positions, policy,
+                            cfg.parallel.remat)
+        aux_total = aux_total + aux
+    x = L.norm_apply(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def logits(cfg: ModelConfig, params: Params, hidden) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (hidden @ head.astype(hidden.dtype)).astype(jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, hidden, labels,
+            chunk: int = 1024) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming CE over SEQUENCE chunks — never materialises (B,S,V) fp32,
+    and never re-partitions the dp-sharded batch dim (chunking the flattened
+    token stream would all-gather the global batch)."""
+    b, s, d = hidden.shape
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    c = min(chunk, s)
+    pad = (-s) % c
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nch = hp.shape[1] // c
+    hc = hp.reshape(b, nch, c, d).transpose(1, 0, 2, 3)     # (nch, B, c, d)
+    lc = lp.reshape(b, nch, c).transpose(1, 0, 2)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(carry, xs):
+        # checkpointed: backward recomputes the (B, c, V) logits instead of
+        # stacking them across the scan (which would be O(S·V) fp32).
+        hx, lx = xs
+        lg = (hx @ head.astype(hx.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, jnp.clip(lx, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (lx >= 0).astype(jnp.float32)
+        nll = ((lse - gold + 1e-4 * lse ** 2) * mask).sum()
+        correct = ((jnp.argmax(lg, -1) == lx) * mask).sum()
+        c0, c1, c2 = carry
+        return (c0 + nll, c1 + correct, c2 + mask.sum()), None
+
+    (nll, correct, denom), _ = lax.scan(
+        chunk_loss, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    denom = jnp.maximum(denom, 1.0)
+    return nll / denom, correct / denom
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype) -> List[Params]:
+    caches = []
+    for unit, repeats in plan_segments(cfg):
+        def unit_cache(_):
+            return {f"u{j}": block_cache_init(cfg, unit[j], batch, seq, dtype)
+                    for j in range(len(unit))}
+        caches.append(jax.vmap(unit_cache)(jnp.arange(repeats)))
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: List[Params],
+                tokens, pos, policy: Policy):
+    """tokens: (B,1); pos: (B,). Returns (logits (B,1,V) fp32, new_cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    new_caches = []
+    for (unit, _), seg_p, seg_c in zip(plan_segments(cfg), params["segments"],
+                                       cache):
+        def body(xx, xs):
+            lp, lc = xs
+            newc = {}
+            for j, sig in enumerate(unit):
+                xx, nc = apply_block_decode(cfg, sig, lp[f"u{j}"],
+                                            lc[f"u{j}"], xx, pos, policy)
+                newc[f"u{j}"] = nc
+            return xx, newc
+        x, new_c = lax.scan(body, x, (seg_p, seg_c))
+        new_caches.append(new_c)
+    x = L.norm_apply(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    return logits(cfg, params, x), new_caches

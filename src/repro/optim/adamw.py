@@ -1,0 +1,126 @@
+"""AdamW with dtype-configurable moment states (fp32 / bf16 / int8).
+
+The int8 path is a distributed-optimization feature for the ≥100B archs:
+moments are stored blockwise-quantized (per-row absmax scales), cutting
+optimizer HBM by 4-8x — the difference between kimi-k2 fitting on a
+16 GB/chip pod or not (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"          # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+# ---------------------------------------------------------------------------
+# Quantized moment storage
+# ---------------------------------------------------------------------------
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 with per-row (last-axis) absmax scale."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _store(x: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _quant(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load(s, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dequant(*s)
+    return s.astype(jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Params
+    v: Params
+
+
+def init(cfg: AdamWConfig, params: Params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: _store(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype),
+        params)
+    z2 = jax.tree.map(
+        lambda p: _store(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype),
+        params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, z2)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads: Params, state: AdamWState,
+           params: Params) -> Tuple[Params, AdamWState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    is_q = cfg.state_dtype == "int8"
+
+    def leaf(g, m_s, v_s, p):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _load(m_s, cfg.state_dtype) + (1 - cfg.b1) * g
+        v = cfg.b2 * _load(v_s, cfg.state_dtype) + (1 - cfg.b2) * g * g
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:      # decay matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, _store(m, cfg.state_dtype), _store(v, cfg.state_dtype)
+
+    is_leaf_state = (lambda x: isinstance(x, tuple)) if is_q else None
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [leaf(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_params, AdamWState(step, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}

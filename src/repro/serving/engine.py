@@ -1,0 +1,127 @@
+"""Batched serving engine: prefill + decode with KV caches.
+
+The request queue is event-driven (``EventCoordinator`` — the Mwait
+analogue): the engine thread sleeps until requests arrive instead of
+polling. Batching is continuous-lite: a fixed-width decode batch whose
+finished slots are refilled from the queue at each step (slot assignment
+goes through the colibri dispatch — FIFO, no slot races).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import EventCoordinator, Policy
+from repro.models import build
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    id: int = 0
+    result: Optional[np.ndarray] = None
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
+                 cache_len: int = 256, policy: Policy = Policy()):
+        self.cfg = cfg
+        self.model = build(cfg)
+        self.params = params
+        self.batch = batch_size
+        self.cache_len = cache_len
+        self.policy = policy
+        self.coord = EventCoordinator()
+        self.requests: "queue.Queue[Request]" = queue.Queue()
+        self._stop = False
+
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_len, policy))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos, policy))
+
+    # ------------------------------------------------------------- client
+    def submit(self, req: Request):
+        self.requests.put(req)
+        self.coord.notify("request_arrived", qsize=self.requests.qsize())
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 16
+                 ) -> np.ndarray:
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens)
+        self.submit(req)
+        req.done.wait()
+        return req.result
+
+    # ------------------------------------------------------------- engine
+    def run_once(self) -> int:
+        """Drain up to ``batch`` requests, serve them, return count.
+        (Greedy decoding; per-request prompt lengths are right-aligned into
+        a common grid via left-padding.)"""
+        batch: List[Request] = []
+        while len(batch) < self.batch and not self.requests.empty():
+            batch.append(self.requests.get())
+        if not batch:
+            return 0
+        b = len(batch)
+        lens = np.array([len(r.prompt) for r in batch], np.int32)
+        max_prompt = int(lens.max())
+        # RIGHT pad: causal attention keeps pad K/V invisible to real tokens,
+        # and per-seq decode positions overwrite pad slots before attending
+        # to them. (Recurrent archs need equal-length prompts — documented.)
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, : len(r.prompt)] = r.prompt
+        pre_batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "audio":
+            pre_batch["encoder_feats"] = jnp.zeros(
+                (b, self.cfg.encoder.seq_len, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype))
+        if self.cfg.frontend == "vlm":
+            pre_batch["patch_embeds"] = jnp.zeros(
+                (b, min(self.cfg.num_patches, max_prompt), self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype))
+        hidden, cache = self._prefill(self.params, pre_batch)
+        last = jnp.asarray(lens - 1)
+        h_last = jnp.take_along_axis(
+            hidden, last[:, None, None].astype(jnp.int32).repeat(
+                hidden.shape[-1], axis=-1), axis=1)      # (B,1,d) per-seq last
+        logits = (h_last @ (
+            self.params["embed"].T if self.cfg.tie_embeddings
+            else self.params["lm_head"]).astype(hidden.dtype)
+        ).astype(jnp.float32)
+        outs = [[] for _ in range(b)]
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        max_new = max(r.max_new_tokens for r in batch)
+        for step in range(max_new):
+            for i in range(b):
+                if step < batch[i].max_new_tokens:
+                    outs[i].append(int(tok[i, 0]))
+            pos = jnp.asarray(lens + step, jnp.int32)    # per-seq position
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for i, r in enumerate(batch):
+            r.result = np.array(outs[i][: r.max_new_tokens], np.int32)
+            r.done.set()
+        return b
+
+    def serve_forever(self):
+        """Event-driven loop: sleep until a request arrives (no polling)."""
+        while not self._stop:
+            if self.requests.empty():
+                try:
+                    self.coord.wait("request_arrived", timeout=0.5)
+                except TimeoutError:
+                    continue
+            self.run_once()
+
+    def stop(self):
+        self._stop = True

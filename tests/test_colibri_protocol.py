@@ -1,0 +1,118 @@
+"""Property tests for the message-level Colibri protocol (paper §IV-A).
+
+Hypothesis drives adversarial message interleavings; the invariants are the
+paper's correctness argument: mutual exclusion, exactly-once service,
+FIFO/starvation-freedom, quiescent queue consistency — including the
+SuccessorUpdate/SCwait race ("bounce") and Mwait chain-drain.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.colibri import ColibriSystem
+
+
+def drive(system: ColibriSystem, n_cores: int, ops_per_core: int, rng):
+    """Each core performs ops_per_core LRSCwait pairs; the scheduler delivers
+    messages in rng-chosen order; cores issue their SCwait a random number of
+    deliveries after their LR response arrives."""
+    remaining = {c: ops_per_core for c in range(n_cores)}
+    can_issue = {c: True for c in range(n_cores)}
+    sc_pending = []          # cores that have the reservation, will SCwait
+
+    base_responses = 0
+    while True:
+        actions = []
+        if not system.mwait:
+            newly_granted = system.responses[base_responses:]
+            for c in newly_granted:
+                sc_pending.append(c)
+            base_responses = len(system.responses)
+        for c in range(n_cores):
+            if remaining[c] > 0 and can_issue[c] and not system.outstanding.get(c):
+                actions.append(("lr", c))
+        for c in list(sc_pending):
+            actions.append(("sc", c))
+        chans = system.pending_channels()
+        for ch in chans:
+            actions.append(("deliver", ch))
+        if not actions:
+            break
+        kind, arg = rng.choice(actions)
+        if kind == "lr":
+            system.core_issue_lrwait(arg)
+            remaining[arg] -= 1
+        elif kind == "sc":
+            sc_pending.remove(arg)
+            system.core_issue_scwait(arg)
+        else:
+            system.deliver(arg)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_cores=st.integers(2, 8), ops=st.integers(1, 4),
+       seed=st.integers(0, 2**32 - 1))
+def test_lrscwait_invariants(n_cores, ops, seed):
+    system = ColibriSystem(n_cores)
+    drive(system, n_cores, ops, random.Random(seed))
+    system.check_final(expected_ops=n_cores * ops)
+    # mutual exclusion was monitored online; SCwait never failed:
+    assert len(system.sc_ok) == n_cores * ops
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_cores=st.integers(2, 8), seed=st.integers(0, 2**32 - 1))
+def test_mwait_chain_drain(n_cores, seed):
+    """All Mwait waiters are woken by a single store, in FIFO order, without
+    any interference from the cores (paper §IV-B)."""
+    rng = random.Random(seed)
+    system = ColibriSystem(n_cores, mwait=True)
+    for c in range(n_cores):
+        system.core_issue_lrwait(c)
+    # deliver all Mwait enqueues (random order across channels)
+    while system.pending_channels():
+        system.deliver(rng.choice(system.pending_channels()))
+    assert system.responses == []        # nobody woken before the store
+    system.store(42)
+    while system.pending_channels():
+        system.deliver(rng.choice(system.pending_channels()))
+    assert system.responses == system.lr_arrival_order
+    assert len(system.responses) == n_cores
+    assert system.head is None and system.tail is None
+    assert not system.violations, system.violations
+
+
+def test_double_lrwait_rejected():
+    """Deadlock-freedom constraint: one outstanding LRwait per core."""
+    system = ColibriSystem(2)
+    system.core_issue_lrwait(0)
+    with pytest.raises(AssertionError):
+        system.core_issue_lrwait(0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_successor_update_bounce(seed):
+    """The race the paper analyses: B enqueues behind A, but A's SCwait
+    passes its Qnode before the SuccessorUpdate arrives — the update must
+    bounce back as a WakeUpRequest and B must still be served."""
+    system = ColibriSystem(2)
+    system.core_issue_lrwait(0)
+    system.deliver(("core:0", "mem"))         # A granted immediately
+    system.deliver(("mem", "core:0"))         # A receives LR response
+    system.core_issue_lrwait(1)
+    system.deliver(("core:1", "mem"))         # B enqueued; SuccUpdate -> A
+    # A issues SCwait BEFORE the SuccessorUpdate is delivered
+    system.core_issue_scwait(0)
+    rng = random.Random(seed)
+    while system.pending_channels():
+        system.deliver(rng.choice(system.pending_channels()))
+    # B must have been granted despite the race
+    assert system.responses == [0, 1]
+    system.core_issue_scwait(1)
+    while system.pending_channels():
+        system.deliver(rng.choice(system.pending_channels()))
+    system.check_final(expected_ops=2)

@@ -1,0 +1,82 @@
+"""Validate the analytic executed-FLOPs model against UNROLLED HLO counts.
+
+The roofline compute term relies on `benchmarks.roofline.executed_flops`
+because `cost_analysis()` counts scan bodies once. Here we build a tiny
+config whose layer loop is fully unrolled (a python loop — no lax.scan),
+lower it, and check the analytic model against XLA's own count.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_analytic_flops_within_30pct_of_unrolled_hlo():
+    code = r"""
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import ParallelSpec, ShapeSpec
+from repro.distributed.sharding import Policy
+from repro.models import build, input_specs
+from repro.models import transformer as TF
+from repro import optim
+from repro.launch.train import make_train_step
+from benchmarks.roofline import executed_flops
+
+# tiny dense config; remat OFF so factor=6 (no recompute ambiguity)
+cfg = get_config("qwen2-7b")
+cfg = dataclasses.replace(cfg, num_layers=2, d_model=256, num_heads=4,
+    num_kv_heads=2, d_ff=512, vocab_size=1024, head_dim=64, qkv_bias=False,
+    parallel=ParallelSpec(remat=False))
+shape = ShapeSpec("t", 256, 4, "train")
+
+# monkeypatch the segment scan into a python loop => fully unrolled HLO
+orig = TF._seg_apply
+def unrolled(cfg_, unit, seg_p, x, positions, policy, remat):
+    import jax
+    aux = jnp.zeros((), jnp.float32)
+    n = jax.tree.leaves(seg_p)[0].shape[0]
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], seg_p)
+        for j, sig in enumerate(unit):
+            x, a = TF.apply_block(cfg_, sig, lp[f"u{j}"], x, positions, policy)
+            aux = aux + a
+    return x, aux
+TF._seg_apply = unrolled
+
+model = build(cfg)
+params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+opt_cfg = optim.AdamWConfig()
+opt = jax.eval_shape(lambda p: optim.init(opt_cfg, p), params)
+step = make_train_step(model, opt_cfg, Policy())
+c = jax.jit(step).lower(params, opt, input_specs(cfg, shape)).compile()
+hlo = c.cost_analysis()["flops"]
+analytic = executed_flops(cfg, shape)
+ratio = analytic / hlo
+print(f"analytic={analytic:.3e} hlo={hlo:.3e} ratio={ratio:.2f}")
+assert 0.7 < ratio < 1.4, ratio
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src")
+               + os.pathsep + REPO)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ratio=" in out.stdout
+
+
+def test_model_flops_formulas():
+    from benchmarks.roofline import model_flops
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("qwen2-7b")
+    t = SHAPES["train_4k"]
+    assert model_flops(cfg, t) == pytest.approx(
+        6.0 * cfg.num_params() * t.global_batch * t.seq_len)
+    moe = get_config("deepseek-v3-671b")
+    assert model_flops(moe, t) == pytest.approx(
+        6.0 * moe.num_active_params() * t.global_batch * t.seq_len)
+    d = SHAPES["decode_32k"]
+    assert model_flops(cfg, d) == pytest.approx(
+        2.0 * cfg.num_params() * d.global_batch)

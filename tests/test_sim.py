@@ -1,0 +1,140 @@
+"""Cycle-level simulator sanity + paper-claim calibration tests.
+
+These encode the paper's quantitative claims as regression bounds so the
+reproduction cannot silently drift (EXPERIMENTS.md reports exact numbers).
+"""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (PAPER_AREA, PAPER_ENERGY, energy_per_op,
+                                  fit_area, fit_energy, system_overhead,
+                                  tile_area)
+from repro.core.sim import PROTOCOLS, SimParams, run
+
+CYCLES = 8000
+
+
+def thr(proto, bins, **kw):
+    return run(SimParams(protocol=proto, n_addrs=bins, cycles=CYCLES,
+                         **kw))["throughput"]
+
+
+def test_amo_is_roofline():
+    """Fig. 3: atomic add bounds every generic-RMW protocol."""
+    for bins in (1, 64, 1024):
+        amo = thr("amo", bins)
+        for proto in ("lrsc", "lrscwait", "colibri"):
+            assert thr(proto, bins) <= amo * 1.05
+
+
+def test_colibri_near_ideal():
+    """Fig. 3: Colibri ≈ LRSCwait_ideal across all contention levels,
+    with only a slight penalty from node-update round trips."""
+    for bins in (1, 16, 256):
+        ideal = thr("lrscwait", bins)
+        col = thr("colibri", bins)
+        assert col >= 0.75 * ideal
+        assert col <= ideal * 1.05
+
+
+def test_lrscwait_q_degrades_above_capacity():
+    """Fig. 3: finite-q LRSCwait degrades once contention > q slots (rejected
+    LRwaits fail immediately and fall back to retry traffic)."""
+    full = run(SimParams(protocol="lrscwait", n_addrs=1, q_slots=256,
+                         cycles=CYCLES))
+    q8 = run(SimParams(protocol="lrscwait", n_addrs=1, q_slots=8,
+                       cycles=CYCLES))
+    assert q8["throughput"] < 0.85 * full["throughput"]
+    assert int(q8["polls"]) > 1000               # rejects retry (polling)
+    assert int(full["polls"]) == 0
+
+
+def test_paper_headline_throughput_ratios():
+    """6.5x at high contention, ~13% at low contention (±35% band)."""
+    hi = thr("colibri", 1) / thr("lrsc", 1)
+    assert 4.0 < hi < 9.0, hi
+    lo = thr("colibri", 256) / thr("lrsc", 256)
+    assert 1.02 < lo < 1.45, lo
+
+
+def test_polling_free():
+    """LRSCwait/Colibri never poll (no failed attempts); LRSC does."""
+    r_col = run(SimParams(protocol="colibri", n_addrs=1, cycles=CYCLES))
+    r_lrsc = run(SimParams(protocol="lrsc", n_addrs=1, cycles=CYCLES))
+    assert int(r_col["polls"]) == 0
+    assert int(r_lrsc["polls"]) > 100
+    assert int(r_col["sleep_cyc"]) > 0          # contenders actually sleep
+
+
+def test_interference_fig5():
+    """Fig. 5: 252 pollers crush LRSC workers; Colibri workers unaffected."""
+    kw = dict(n_addrs=1, n_workers=4, net_bw=13, hol_block=16,
+              cycles=CYCLES, backoff=128, backoff_exp=1)
+    def rel(proto):
+        r = run(SimParams(protocol=proto, **kw))
+        base = run(SimParams(protocol=proto, n_cores=4, **kw))
+        return r["worker_rate"] / base["worker_rate"]
+    assert rel("colibri") > 0.9
+    assert rel("lrsc") < 0.5                     # paper: 0.26
+
+
+def test_queue_fairness_fig6():
+    """Fig. 6: Colibri distributes ops evenly; LRSC has wide min/max span."""
+    r_col = run(SimParams(protocol="colibri", n_addrs=2, cycles=CYCLES))
+    r_lrsc = run(SimParams(protocol="lrsc", n_addrs=2, cycles=CYCLES))
+    col_span = r_col["fairness_max"] / max(r_col["fairness_min"], 1e-9)
+    lrsc_span = r_lrsc["fairness_max"] / max(r_lrsc["fairness_min"], 1e-9)
+    assert col_span < lrsc_span
+    assert col_span < 3.0
+
+
+def test_queue_throughput_scaling_fig6():
+    """Fig. 6 (concurrent queue, 2 hot addresses, link-update RMWs, fixed
+    backoff): Colibri sustains flat throughput to 256 cores and beats LRSC
+    everywhere; LRSC collapses at scale. NOTE: the collapse onset in our
+    machine model is at 256 cores (paper: 64) — documented calibration
+    residual in EXPERIMENTS.md."""
+    kw = dict(modify=8, backoff=128, backoff_exp=1)
+    col = {n: thr("colibri", 2, n_cores=n, **kw) for n in (8, 64, 256)}
+    lrsc = {n: thr("lrsc", 2, n_cores=n, **kw) for n in (8, 64, 256)}
+    for n in (8, 64, 256):
+        assert col[n] > lrsc[n]                  # colibri best everywhere
+    assert col[8] / lrsc[8] > 1.4                # paper: 1.54x at 8 cores
+    assert col[256] / lrsc[256] > 2.5            # collapse at scale
+    assert col[256] > 0.8 * col[8]               # colibri sustained
+
+
+def test_area_model_matches_table1():
+    fit = fit_area()
+    for name, (param, kge) in PAPER_AREA.items():
+        design = name.rsplit("_", 1)[0]
+        model = tile_area(design, param, fit)
+        assert abs(model - kge) / kge < 0.02, (name, model, kge)
+
+
+def test_colibri_area_scales_linearly():
+    """Section IV: Colibri state is O(n + 2m); ideal LRSCwait O(n log n m)."""
+    c1 = system_overhead("colibri", 256, 1024)
+    c2 = system_overhead("colibri", 512, 2048)
+    assert c2 / c1 == pytest.approx(2.0, rel=0.01)
+    i1 = system_overhead("lrscwait_ideal", 256, 1024)
+    i2 = system_overhead("lrscwait_ideal", 512, 2048)
+    assert i2 / i1 > 4.0                          # superlinear
+
+
+def test_energy_model_table2():
+    stats = {}
+    for proto in ("amo", "colibri", "lrsc", "amo_lock"):
+        r = run(SimParams(protocol=proto, n_addrs=1, cycles=CYCLES))
+        stats[proto] = {k: float(r[k]) for k in
+                        ("msgs", "bank_ops", "active_cyc", "sleep_cyc",
+                         "backoff_cyc")}
+        stats[proto]["ops"] = float(r["ops"].sum())
+    fit = fit_energy(stats)
+    for proto, target in PAPER_ENERGY.items():
+        model = energy_per_op(stats[proto], fit)
+        assert abs(model - target) / target < 0.40, (proto, model, target)
+    # ordering: amo << colibri << lrsc, amo_lock
+    e = {p: energy_per_op(stats[p], fit) for p in stats}
+    assert e["amo"] < e["colibri"] < e["lrsc"]
+    assert e["colibri"] < e["amo_lock"]
