@@ -5,12 +5,16 @@ The paper's claims validated here (EXPERIMENTS.md §Fig3):
   * Colibri ≈ LRSCwait_ideal (slight node-update penalty);
   * LRSCwait_q collapses once contention > q;
   * Colibri / LRSC ≈ 6.5× at highest contention, ~13–20% at low contention.
+
+The contention axis runs through ``core.sweep``: one engine compile per
+protocol covers all bin counts (the seed code re-jitted per point).
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.sim import SimParams, run
+from repro.core.sim import SimParams
+from repro.core.sweep import sweep
 
 BINS = (1, 4, 16, 64, 256, 1024)
 PROTOS = ("amo", "lrsc", "lrscwait", "colibri")
@@ -18,22 +22,20 @@ CYCLES = 12_000
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    out = []
-    for proto in PROTOS:
-        for bins in BINS:
-            r = run(SimParams(protocol=proto, n_addrs=bins, cycles=cycles))
-            out.append({"figure": "fig3", "protocol": proto, "bins": bins,
-                        "updates_per_cycle": r["throughput"],
-                        "polls": int(r["polls"]),
-                        "msgs": int(r["msgs"]),
-                        "sleep_cyc": int(r["sleep_cyc"])})
+    labelled = [(proto, SimParams(protocol=proto, n_addrs=bins,
+                                  cycles=cycles))
+                for proto in PROTOS for bins in BINS]
     # LRSCwait_q = 8 line (capacity collapse)
-    for bins in BINS:
-        r = run(SimParams(protocol="lrscwait", q_slots=8, n_addrs=bins,
-                          cycles=cycles))
-        out.append({"figure": "fig3", "protocol": "lrscwait_q8", "bins": bins,
+    labelled += [("lrscwait_q8", SimParams(protocol="lrscwait", q_slots=8,
+                                           n_addrs=bins, cycles=cycles))
+                 for bins in BINS]
+    labels, configs = zip(*labelled)
+    out = []
+    for label, p, r in zip(labels, configs, sweep(configs)):
+        out.append({"figure": "fig3", "protocol": label, "bins": p.n_addrs,
                     "updates_per_cycle": r["throughput"],
-                    "polls": int(r["polls"]), "msgs": int(r["msgs"]),
+                    "polls": int(r["polls"]),
+                    "msgs": int(r["msgs"]),
                     "sleep_cyc": int(r["sleep_cyc"])})
     return out
 

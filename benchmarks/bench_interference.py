@@ -3,12 +3,18 @@
 252:4 .. 128:128 poller:worker splits on the congested-link regime
 (net_bw=13, hol_block=16, the paper's stated fixed 128-cycle backoff).
 Claims: Colibri pollers leave workers unaffected (≈1.0); LRSC pollers crush
-them (paper 0.26; our machine model 0.33 at 252:4)."""
+them (paper 0.26; our machine model 0.33 at 252:4).
+
+The worker-split axis runs through ``core.sweep``: per protocol, the four
+256-core contended runs share one compile (``n_workers`` is a traced
+axis); only the isolated baselines compile per core count.
+"""
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.sim import SimParams, run
+from repro.core.sim import SimParams
+from repro.core.sweep import sweep
 
 SPLITS = (4, 16, 64, 128)                 # workers; pollers = 256 - workers
 PROTOS = ("amo", "lrsc", "colibri", "lrscwait")
@@ -17,17 +23,20 @@ NET = dict(net_bw=13, hol_block=16, backoff=128, backoff_exp=1)
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
+    contended = [SimParams(protocol=proto, n_addrs=1, n_workers=w,
+                           cycles=cycles, **NET)
+                 for proto in PROTOS for w in SPLITS]
+    isolated = [SimParams(protocol=proto, n_addrs=1, n_cores=w, n_workers=w,
+                          cycles=cycles, **NET)
+                for proto in PROTOS for w in SPLITS]
+    res = sweep(contended + isolated)
     out = []
-    for proto in PROTOS:
-        for w in SPLITS:
-            r = run(SimParams(protocol=proto, n_addrs=1, n_workers=w,
-                              cycles=cycles, **NET))
-            base = run(SimParams(protocol=proto, n_addrs=1, n_cores=w,
-                                 n_workers=w, cycles=cycles, **NET))
-            rel = r["worker_rate"] / max(base["worker_rate"], 1e-9)
-            out.append({"figure": "fig5", "protocol": proto,
-                        "pollers": 256 - w, "workers": w,
-                        "relative_worker_perf": rel})
+    for i, p in enumerate(contended):
+        r, base = res[i], res[len(contended) + i]
+        rel = r["worker_rate"] / max(base["worker_rate"], 1e-9)
+        out.append({"figure": "fig5", "protocol": p.protocol,
+                    "pollers": 256 - p.n_workers, "workers": p.n_workers,
+                    "relative_worker_perf": rel})
     return out
 
 

@@ -1,36 +1,47 @@
 """Fig. 4 — lock-based histogram vs. generic-RMW atomics.
 
-Colibri (direct LRSCwait RMW) vs spin locks (AMO test&set, LRSC pair) with
-the paper's fixed 128-cycle backoff, and the Mwait MCS queue lock.
-Claims: Colibri best everywhere; spin locks collapse at high contention;
-waiting-based locks worst at LOW contention (management overhead)."""
+Colibri (direct LRSCwait RMW) vs spin locks (AMO test&set, LRSC pair,
+FIFO ticket dispenser) with the paper's fixed 128-cycle backoff, and the
+Mwait MCS queue lock.  Claims: Colibri best everywhere; spin locks
+collapse at high contention; waiting-based locks worst at LOW contention
+(management overhead).  ``ticket_lock`` sits between: polling like
+``amo_lock`` but with FIFO fairness, paying serialized ticket handoffs.
+
+The contention axis runs through ``core.sweep`` (one compile per lock).
+"""
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.sim import SimParams, run
+from repro.core.sim import SimParams
+from repro.core.sweep import sweep
 
 BINS = (1, 4, 16, 64, 256, 1024)
-LOCKS = ("colibri", "amo_lock", "lrsc_lock", "mwait_lock")
+LOCKS = ("colibri", "amo_lock", "lrsc_lock", "ticket_lock", "mwait_lock")
 CYCLES = 12_000
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    out = []
+    configs = []
     for proto in LOCKS:
-        for bins in BINS:
-            kw = dict(backoff=128, backoff_exp=1) if proto.endswith("lock") \
-                else {}
-            r = run(SimParams(protocol=proto, n_addrs=bins, cycles=cycles,
-                              **kw))
-            out.append({"figure": "fig4", "protocol": proto, "bins": bins,
-                        "updates_per_cycle": r["throughput"],
-                        "polls": int(r["polls"])})
+        kw = dict(backoff=128, backoff_exp=1) if proto.endswith("lock") \
+            else {}
+        configs += [SimParams(protocol=proto, n_addrs=bins, cycles=cycles,
+                              **kw) for bins in BINS]
+    out = []
+    for p, r in zip(configs, sweep(configs)):
+        out.append({"figure": "fig4", "protocol": p.protocol,
+                    "bins": p.n_addrs,
+                    "updates_per_cycle": r["throughput"],
+                    "polls": int(r["polls"]),
+                    "fairness_span": (r["fairness_max"]
+                                      / max(r["fairness_min"], 1e-9))})
     return out
 
 
 def headline(rs: List[Dict]) -> Dict[str, float]:
     t = {(r["protocol"], r["bins"]): r["updates_per_cycle"] for r in rs}
+    span = {(r["protocol"], r["bins"]): r["fairness_span"] for r in rs}
     return {
         "colibri_over_amo_lock_high": t[("colibri", 1)] / t[("amo_lock", 1)],
         "colibri_over_mwait_lock_high":
@@ -38,4 +49,6 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
         "colibri_best_everywhere": float(all(
             t[("colibri", b)] >= max(t[(p, b)] for p in LOCKS[1:]) * 0.99
             for b in BINS)),
+        "ticket_fair_vs_amo_lock_unfair": float(
+            span[("ticket_lock", 4)] <= span[("amo_lock", 4)]),
     }

@@ -3,29 +3,38 @@
 Queue ops = RMWs on 2 hot addresses (head/tail) with link-update modify
 time, fixed backoff for the retry protocols. Claims: Colibri sustains flat
 throughput to 256 cores and is the fairest (narrow min/max band); LRSC and
-the lock-based queue collapse at scale. Calibration residual: our collapse
-onset is 256 cores (paper: 64) — see EXPERIMENTS.md."""
+the lock-based queue collapse at scale.  ``colibri_hier`` tracks flat
+Colibri while keeping most wake-ups inside a cluster.  Calibration
+residual: our collapse onset is 256 cores (paper: 64) — see
+EXPERIMENTS.md.
+
+Configs run through ``core.sweep`` — the core-count axis changes array
+shapes so each (protocol, cores) point still compiles separately, but the
+shared runner keeps the API uniform and batches any same-shape points.
+"""
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.sim import SimParams, run
+from repro.core.sim import SimParams
+from repro.core.sweep import sweep
 
 CORES = (2, 8, 32, 64, 128, 256)
-PROTOS = ("colibri", "lrsc", "amo_lock")
+PROTOS = ("colibri", "colibri_hier", "lrsc", "amo_lock")
 CYCLES = 10_000
 KW = dict(n_addrs=2, modify=8, backoff=128, backoff_exp=1)
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
+    configs = [SimParams(protocol=proto, n_cores=n, cycles=cycles, **KW)
+               for proto in PROTOS for n in CORES]
     out = []
-    for proto in PROTOS:
-        for n in CORES:
-            r = run(SimParams(protocol=proto, n_cores=n, cycles=cycles, **KW))
-            out.append({"figure": "fig6", "protocol": proto, "cores": n,
-                        "ops_per_cycle": r["throughput"],
-                        "slowest_core": r["fairness_min"],
-                        "fastest_core": r["fairness_max"]})
+    for p, r in zip(configs, sweep(configs)):
+        out.append({"figure": "fig6", "protocol": p.protocol,
+                    "cores": p.n_cores,
+                    "ops_per_cycle": r["throughput"],
+                    "slowest_core": r["fairness_min"],
+                    "fastest_core": r["fairness_max"]})
     return out
 
 
@@ -40,5 +49,8 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
             t[("colibri", 256)]["ops_per_cycle"]
             / t[("lrsc", 256)]["ops_per_cycle"],
         "colibri_fairness_span_256": span(t[("colibri", 256)]),
+        "hier_over_colibri_256":
+            t[("colibri_hier", 256)]["ops_per_cycle"]
+            / t[("colibri", 256)]["ops_per_cycle"],
         "lrsc_fairness_span_256": span(t[("lrsc", 256)]),
     }

@@ -1,0 +1,64 @@
+"""Sweep-runner speedup: vmapped grid vs. sequential per-config ``run``.
+
+The acceptance bar for the protocol-plugin refactor: a ≥8-point sweep
+through ``core.sweep`` must beat the equivalent sequential per-config
+``sim.run`` loop end-to-end (the seed pattern re-jits the engine at every
+grid point; the sweep compiles once per static fingerprint and batches
+the rest through ``jax.vmap``).  Numbers land in EXPERIMENTS.md §Sweep.
+
+Both paths are timed cold within one process: neither shares a jit cache
+entry with the other (``run`` jits per static SimParams; the sweep jits
+one vmapped group), so ordering does not favour the sweep.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.sim import SimParams, run
+from repro.core.sweep import sweep
+
+CYCLES = 6_000
+GRID = [dict(n_addrs=a, lat=l, work=w, seed=s)
+        for a, l, w, s in [(1, 5, 10, 0), (4, 5, 10, 1), (16, 5, 10, 2),
+                           (64, 5, 10, 3), (1, 3, 6, 4), (16, 3, 6, 5),
+                           (4, 9, 14, 6), (64, 9, 14, 7), (256, 5, 10, 8),
+                           (1, 9, 6, 9), (16, 9, 10, 10), (256, 3, 14, 11)]]
+
+
+def rows(cycles: int = CYCLES) -> List[Dict]:
+    configs = [SimParams(protocol="colibri", n_cores=128, cycles=cycles,
+                         **g) for g in GRID]
+    t0 = time.perf_counter()
+    swept = sweep(configs)
+    t_sweep = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq = [run(c) for c in configs]
+    t_seq = time.perf_counter() - t0
+    out = []
+    for p, rs, rq in zip(configs, swept, seq):
+        out.append({"figure": "sweep", "n_addrs": p.n_addrs, "lat": p.lat,
+                    "work": p.work, "seed": p.seed,
+                    "updates_per_cycle": rs["throughput"],
+                    "matches_run": bool(
+                        np.array_equal(rs["ops"], rq["ops"])
+                        and int(rs["msgs"]) == int(rq["msgs"])
+                        and int(rs["polls"]) == int(rq["polls"]))})
+    out.append({"figure": "sweep", "timing": True, "n_configs": len(configs),
+                "sweep_s": t_sweep, "sequential_s": t_seq,
+                "speedup": t_seq / t_sweep})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    timing = next(r for r in rs if r.get("timing"))
+    return {
+        "n_configs": float(timing["n_configs"]),
+        "sweep_s": timing["sweep_s"],
+        "sequential_s": timing["sequential_s"],
+        "sweep_speedup_over_sequential": timing["speedup"],
+        "all_results_match_run": float(all(
+            r["matches_run"] for r in rs if not r.get("timing"))),
+    }

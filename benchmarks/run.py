@@ -2,9 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows plus a headline summary that
 EXPERIMENTS.md quotes. Roofline/dry-run analysis lives in
-``benchmarks/roofline.py`` (reads reports/dryrun/*.json)."""
+``benchmarks/roofline.py`` (reads reports/dryrun/*.json).
+
+``--only <name>`` runs a single benchmark (substring match), e.g.::
+
+    PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --only table1_area
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -21,25 +27,45 @@ def _run(name, mod):
     return {"rows": rs, "headline": head}
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (bench_area, bench_energy, bench_histogram,
                             bench_interference, bench_locks, bench_queue,
-                            bench_scatter_kernel)
+                            bench_scatter_kernel, bench_sweep)
+    benches = {
+        "fig3_histogram": bench_histogram,
+        "fig4_locks": bench_locks,
+        "fig5_interference": bench_interference,
+        "fig6_queue": bench_queue,
+        "table1_area": bench_area,
+        "table2_energy": bench_energy,
+        "scatter_kernel": bench_scatter_kernel,
+        "sweep_speedup": bench_sweep,
+    }
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", metavar="NAME", default=None,
+                    help="run a single benchmark (substring match against "
+                         + ", ".join(benches))
+    args = ap.parse_args(argv)
+    if args.only:
+        selected = {k: v for k, v in benches.items() if args.only in k}
+        if not selected:
+            raise SystemExit(f"--only {args.only!r} matches none of: "
+                             + ", ".join(benches))
+    else:
+        selected = benches
+
     results = {}
     print("name,us_per_call,derived")
-    results["fig3_histogram"] = _run("fig3_histogram", bench_histogram)
-    results["fig4_locks"] = _run("fig4_locks", bench_locks)
-    results["fig5_interference"] = _run("fig5_interference", bench_interference)
-    results["fig6_queue"] = _run("fig6_queue", bench_queue)
-    results["table1_area"] = _run("table1_area", bench_area)
-    results["table2_energy"] = _run("table2_energy", bench_energy)
-    results["scatter_kernel"] = _run("scatter_kernel", bench_scatter_kernel)
+    for name, mod in selected.items():
+        results[name] = _run(name, mod)
 
     out_dir = os.path.join(os.path.dirname(__file__), "..", "reports")
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "benchmarks.json"), "w") as f:
+    suffix = f".{args.only}" if args.only else ""
+    out_path = os.path.join(out_dir, f"benchmarks{suffix}.json")
+    with open(out_path, "w") as f:
         json.dump(results, f, indent=1, default=str)
-    print(f"# full rows -> {os.path.join(out_dir, 'benchmarks.json')}")
+    print(f"# full rows -> {out_path}")
 
 
 if __name__ == "__main__":

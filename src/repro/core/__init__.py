@@ -2,11 +2,15 @@
 
 * ``dispatch``  — colibri ordered-commit: the LRSCwait insight (linearize at
   request time, serve in order, commit exactly once) as an SPMD primitive.
-* ``sim``       — vectorized cycle-level manycore simulator (performance
-  reproduction: Figs. 3–6).
+* ``sim``       — vectorized cycle-level manycore engine (performance
+  reproduction: Figs. 3–6), parameterized by a protocol plugin.
+* ``protocols`` — registry of synchronization protocol plugins (the
+  paper's seven plus ``colibri_hier`` and ``ticket_lock``).
+* ``sweep``     — batched parameter sweeps: jit the engine once per
+  protocol, ``jax.vmap`` across the grid.
 * ``colibri``   — message-level protocol model (correctness: Section IV-A).
 * ``costmodel`` — area/energy models calibrated to Tables I–II.
 """
-from repro.core import colibri, costmodel, dispatch, sim
+from repro.core import colibri, costmodel, dispatch, protocols, sim, sweep
 
-__all__ = ["colibri", "costmodel", "dispatch", "sim"]
+__all__ = ["colibri", "costmodel", "dispatch", "protocols", "sim", "sweep"]

@@ -118,10 +118,12 @@ def ordered_segment_reduce(keys: jnp.ndarray, values: jnp.ndarray,
     associative scan with boundary resets."""
     if op == "add":
         return ordered_segment_sum(keys, values, num_bins)
+    ident = {"max": -jnp.inf, "min": jnp.inf}[op]
+    if keys.shape[0] == 0:                       # no requests: all identity
+        return jnp.full((num_bins,), ident, jnp.float32).astype(values.dtype)
     order = jnp.argsort(keys, stable=True)
     sk = keys[order]
     sv = values[order]
-    ident = {"max": -jnp.inf, "min": jnp.inf}[op]
     fn = {"max": jnp.maximum, "min": jnp.minimum}[op]
     is_start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
 

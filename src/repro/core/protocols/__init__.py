@@ -1,0 +1,29 @@
+"""Synchronization protocol plugins for the cycle-level engine.
+
+Importing this package registers every built-in protocol:
+
+=============  ==========================================================
+``amo``        single-instruction atomic add (roofline)
+``lrsc``       MemPool LR/SC, one sticky reservation slot (retry storms)
+``lrscwait``   q reservation slots, linearized at the LR
+``colibri``    LRSCwait with an unbounded distributed queue
+``colibri_hier``  two-level Colibri: cluster-local queues + global queue
+``amo_lock``   test&set spin lock with backoff
+``lrsc_lock``  spin lock from an LR/SC pair (two round trips/attempt)
+``ticket_lock``  FIFO spin lock (ticket dispenser; polling but fair)
+``mwait_lock`` MCS queue lock, waiters sleep via Mwait (polling-free)
+=============  ==========================================================
+
+New protocols: subclass :class:`~repro.core.protocols.base.Protocol`,
+decorate with :func:`~repro.core.protocols.registry.register`, and import
+the module here.  The engine (``core.sim``), the vmapped sweep runner
+(``core.sweep``), and the benchmarks resolve plugins by name.
+"""
+from repro.core.protocols import (amo, colibri, colibri_hier, locks, lrsc,
+                                  lrscwait, mwait)
+from repro.core.protocols.base import Ctx, Protocol
+from repro.core.protocols.registry import get, names, register
+
+__all__ = ["Ctx", "Protocol", "get", "names", "register",
+           "amo", "colibri", "colibri_hier", "locks", "lrsc", "lrscwait",
+           "mwait"]

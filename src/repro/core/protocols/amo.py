@@ -1,0 +1,24 @@
+"""``amo`` — single-instruction atomic add (Fig. 3 roofline).
+
+No bank state: the RMW commits in one bank access, the response sends the
+core straight back to work.  Every generic-RMW protocol is bounded above
+by this line.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import NXT_WORK_DONE, RESP, Protocol
+from repro.core.protocols.registry import register
+
+
+@register
+class Amo(Protocol):
+    name = "amo"
+
+    def on_access(self, ctx, cs, bank):
+        p = ctx.p
+        cs["st"] = jnp.where(ctx.is_acq, RESP, cs["st"])
+        cs["tmr"] = jnp.where(ctx.is_acq, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(ctx.is_acq, NXT_WORK_DONE, cs["nxt"])
+        return cs, bank

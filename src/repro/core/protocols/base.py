@@ -1,0 +1,108 @@
+"""Protocol plugin interface for the cycle-level engine (``core.sim``).
+
+The engine owns everything protocol-agnostic: per-core timers and state
+transitions, the backoff policy, worker traffic, network acceptance with
+head-of-line blocking, and per-bank FIFO arbitration.  A ``Protocol``
+owns only what happens when an arbitrated request reaches its bank:
+
+* ``init_bank_state``  — the per-bank pytree (reservation slots, queues,
+  lock bits, ...) carried through the ``lax.scan``.
+* ``init_core_state``  — optional per-core protocol state (e.g. a ticket).
+* ``on_access``        — handle this cycle's bank winners (at most one per
+  bank, guaranteed by the engine's arbitration), split into acquire
+  (``ctx.is_acq``) and release (``ctx.is_rel``) lanes.
+* ``on_wake``          — queue-based protocols: fire wake-up timers and
+  move sleeping cores back to their critical section.
+
+Handlers are pure: they take the mutable dicts (``cs`` for per-core state
++ message/poll counters, ``bank`` for bank state) and return updated
+copies.  All protocol logic stays inside masked vectorized updates over
+the full core/bank arrays — a handler is exactly one of the former
+``step()`` branches, lifted into a module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+
+# core states
+WORK, REQ, SLEEP, MOD, BACKOFF, RESP = 0, 1, 2, 3, 4, 5
+# request phases
+P_ACQ, P_REL = 0, 1
+# resp_next codes
+NXT_WORK_DONE, NXT_MOD, NXT_BACKOFF = 0, 1, 2
+
+
+def mset(arr, idx, mask, val):
+    """Masked scatter-set: only lanes with mask write; others dropped
+    (out-of-bounds index). Avoids duplicate-index races."""
+    oob = jnp.full_like(idx, arr.shape[0])
+    return arr.at[jnp.where(mask, idx, oob)].set(val, mode="drop")
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-cycle view handed to protocol handlers.
+
+    ``p`` is the resolved parameter namespace — fields may be traced
+    scalars when running under the vmapped sweep (``core.sweep``), so
+    handlers must treat them as jax values, never as Python ints for
+    shapes.  ``n``/``a``/``q_cap`` are always static.
+    """
+    p: Any                   # resolved SimParams-like namespace
+    n: int                   # cores (static)
+    a: int                   # banks allocated (static upper bound)
+    q_cap: int               # queue slots per bank (static)
+    is_acq: jnp.ndarray      # (n,) bool — this cycle's acquire winners
+    is_rel: jnp.ndarray      # (n,) bool — this cycle's release winners
+    wa: jnp.ndarray          # (n,) int32 — each core's target bank
+    wc: jnp.ndarray          # (n,) int32 — arange(n) core ids
+
+
+class Protocol:
+    """Base protocol plugin. Subclasses override the hooks they need."""
+
+    name: str = ""
+    #: queue-based protocols get the engine's wake pass and their wake-up
+    #: responses counted against next cycle's network budget.
+    uses_queue: bool = False
+    #: lock-style protocols use the paper's FIXED backoff (exp cap 1);
+    #: bare retry protocols use the calibrated exponential policy.
+    fixed_backoff: bool = False
+
+    # ---- static sizing ----
+    def q_cap(self, p, n: int) -> int:
+        """Queue slots per bank (static). Default: one per core."""
+        return n
+
+    # ---- state ----
+    def init_bank_state(self, p, a: int, n: int, q_cap: int) -> Dict:
+        return {}
+
+    def init_core_state(self, p, n: int) -> Dict:
+        return {}
+
+    # ---- handlers ----
+    def on_access(self, ctx: Ctx, cs: Dict, bank: Dict
+                  ) -> Tuple[Dict, Dict]:
+        raise NotImplementedError
+
+    def on_wake(self, ctx: Ctx, cs: Dict, bank: Dict
+                ) -> Tuple[Dict, Dict, jnp.ndarray]:
+        """Fire wake-up timers; return (cs, bank, wake_load) where
+        ``wake_load`` is the number of wake responses that will occupy
+        network slots next cycle.  Default implementation: a single FIFO
+        queue per bank (lrscwait / colibri / mwait_lock)."""
+        wake_tmr = bank["wake_tmr"]
+        fire = wake_tmr == 1
+        wake_tmr = jnp.maximum(wake_tmr - 1, 0)
+        head_core = bank["qbuf"][jnp.arange(ctx.a), bank["qhead"]]
+        # wake the head core of each firing queue
+        fire_core = jnp.where(fire & (bank["qlen"] > 0), head_core, ctx.n)
+        woken = jnp.zeros((ctx.n,), bool).at[fire_core].set(True, mode="drop")
+        cs["st"] = jnp.where(woken, MOD, cs["st"])
+        cs["tmr"] = jnp.where(woken, ctx.p.modify, cs["tmr"])
+        bank["wake_tmr"] = wake_tmr
+        return cs, bank, (wake_tmr == 1).sum()

@@ -1,0 +1,26 @@
+"""``colibri`` — LRSCwait with an unbounded distributed queue.
+
+Same queue semantics as ``lrscwait`` with q = N (the linked list of
+per-core Qnodes never fills), but the wake-up takes an extra round trip
+(SCwait → Qnode → WakeUpRequest → memory → LR response) and
+SuccessorUpdates add network traffic.
+"""
+from __future__ import annotations
+
+from repro.core.protocols.lrscwait import LrscWait
+from repro.core.protocols.registry import register
+
+
+@register
+class Colibri(LrscWait):
+    name = "colibri"
+    successor_updates = True
+
+    def q_cap(self, p, n):
+        return n                             # distributed queue never fills
+
+    def wake_delay(self, p):
+        # the WakeUpRequest is dispatched when the SCwait PASSES the Qnode,
+        # travelling in parallel with it — the successor's response costs
+        # one response latency plus a small Qnode bounce.
+        return p.lat + 2

@@ -1,0 +1,162 @@
+"""``colibri_hier`` — two-level Colibri: group-local queues + a global
+spillover queue of groups.
+
+Models the paper's distributed reservations at cluster granularity: cores
+are partitioned into ``n_groups`` clusters.  Waiters enqueue in a queue
+local to their (address, group) pair — a SuccessorUpdate that stays inside
+the cluster (1 hop) and a wake-up that costs only an intra-cluster Qnode
+bounce (2 cycles).  A group with waiters registers once in the address's
+global FIFO of groups; when the serving group's local queue drains, the
+release hands the address to the next registered group with the full
+cross-cluster wake round trip (``lat + 2``).
+
+Like flat Colibri this is polling-free and retry-free (local queues are
+sized for the worst case of one outstanding RMW per core, so an LRwait
+never bounces); unlike flat Colibri, the common-case wake and
+SuccessorUpdate stay inside a cluster, trading strict global FIFO for
+group-batched service.  Fairness across groups is preserved by a turn
+budget: after ``group_size`` ops a group with registered competitors
+re-registers at the global tail and hands the address over, so no group
+can starve another (round-robin at cluster granularity).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import (MOD, NXT_MOD, NXT_WORK_DONE, RESP,
+                                       SLEEP, Protocol, mset)
+from repro.core.protocols.registry import register
+
+
+@register
+class ColibriHier(Protocol):
+    name = "colibri_hier"
+    uses_queue = True
+    local_delay = 2          # intra-cluster Qnode bounce
+
+    @staticmethod
+    def _geom(p, n):
+        """(n_groups, group_size, local queue capacity) — all static."""
+        g = max(1, min(p.n_groups, n))
+        gsz = max(1, n // g)
+        cap_l = max(gsz, n - (g - 1) * gsz)  # last group may be larger
+        return g, gsz, cap_l
+
+    def init_bank_state(self, p, a, n, q_cap):
+        g, _, cap_l = self._geom(p, n)
+        return dict(
+            lqbuf=jnp.full((a * g, cap_l), -1, jnp.int32),
+            lqhead=jnp.zeros((a * g,), jnp.int32),
+            lqlen=jnp.zeros((a * g,), jnp.int32),
+            ggq=jnp.full((a, g), -1, jnp.int32),    # FIFO of group ids
+            gqhead=jnp.zeros((a,), jnp.int32),
+            gqlen=jnp.zeros((a,), jnp.int32),
+            g_inq=jnp.zeros((a, g), bool),
+            cur_grp=jnp.full((a,), -1, jnp.int32),  # group holding the turn
+            turn_srv=jnp.zeros((a,), jnp.int32),    # ops served this turn
+            wake_tmr=jnp.zeros((a,), jnp.int32),
+            wake_q=jnp.zeros((a,), jnp.int32),      # flat local-queue to wake
+        )
+
+    def on_access(self, ctx, cs, bank):
+        p, wa, wc = ctx.p, ctx.wa, ctx.wc
+        is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        G, gsz, cap_l = self._geom(p, ctx.n)
+        lqbuf, lqhead, lqlen = bank["lqbuf"], bank["lqhead"], bank["lqlen"]
+        ggq, gqhead, gqlen = bank["ggq"], bank["gqhead"], bank["gqlen"]
+        g_inq, cur_grp = bank["g_inq"], bank["cur_grp"]
+        turn_srv = bank["turn_srv"]
+        wake_tmr, wake_q = bank["wake_tmr"], bank["wake_q"]
+
+        g = jnp.minimum(wc // gsz, G - 1)        # each core's group
+        lq = wa * G + g                          # flat (addr, group) queue id
+        oob_a = jnp.full_like(wa, ctx.a)
+        oob_lq = jnp.full_like(lq, ctx.a * G)
+
+        # ---- acquire ----
+        idle = cur_grp[wa] < 0                   # no turn in progress
+        grant = is_acq & idle
+        cur_grp = mset(cur_grp, wa, grant, g)
+        turn_srv = mset(turn_srv, wa, grant, 0)
+        cs["st"] = jnp.where(grant, RESP, cs["st"])
+        cs["tmr"] = jnp.where(grant, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(grant, NXT_MOD, cs["nxt"])
+        # enqueue in the group-local queue and sleep (never full: cap_l
+        # covers one outstanding RMW per member core — polling-free)
+        enq = is_acq & ~idle
+        slot = (lqhead[lq] + lqlen[lq]) % cap_l
+        lqbuf = lqbuf.at[jnp.where(enq, lq, oob_lq), slot].set(wc, mode="drop")
+        lqlen = lqlen.at[lq].add(jnp.where(enq, 1, 0), mode="drop")
+        cs["st"] = jnp.where(enq, SLEEP, cs["st"])
+        cs["msgs"] = cs["msgs"] + enq.sum()      # intra-cluster SuccUpdate
+        # first waiter of a non-serving group registers it globally
+        reg = enq & (cur_grp[wa] != g) & ~g_inq[wa, g]
+        gslot = (gqhead[wa] + gqlen[wa]) % G
+        ggq = ggq.at[jnp.where(reg, wa, oob_a), gslot].set(g, mode="drop")
+        gqlen = gqlen.at[wa].add(jnp.where(reg, 1, 0), mode="drop")
+        g_inq = g_inq.at[jnp.where(reg, wa, oob_a), g].set(True, mode="drop")
+        cs["msgs"] = cs["msgs"] + 2 * reg.sum()  # global registration RT
+
+        # ---- release (releaser's group always == cur_grp[wa]) ----
+        srv = turn_srv[wa] + 1                   # ops completed this turn
+        # turn budget: with competitors registered, a group yields after
+        # group_size ops even if its local queue still holds waiters —
+        # round-robin fairness at cluster granularity
+        exhausted = is_rel & (srv >= gsz) & (gqlen[wa] > 0)
+        more_local = is_rel & (lqlen[lq] > 0) & ~exhausted
+        wake_q = mset(wake_q, wa, more_local, lq)
+        wake_tmr = mset(wake_tmr, wa, more_local, self.local_delay)
+        cs["msgs"] = cs["msgs"] + more_local.sum()   # intra-cluster wake
+        turn_srv = mset(turn_srv, wa, more_local, srv)
+        # yielding with waiters left: re-register at the global tail
+        re_reg = is_rel & (lqlen[lq] > 0) & exhausted
+        tail = (gqhead[wa] + gqlen[wa]) % G
+        ggq = ggq.at[jnp.where(re_reg, wa, oob_a), tail].set(g, mode="drop")
+        gqlen = gqlen.at[wa].add(jnp.where(re_reg, 1, 0), mode="drop")
+        g_inq = g_inq.at[jnp.where(re_reg, wa, oob_a), g].set(
+            True, mode="drop")
+        cs["msgs"] = cs["msgs"] + 2 * re_reg.sum()   # re-registration RT
+        # turn over: local queue drained, or budget spent with competitors
+        end_turn = is_rel & ((lqlen[lq] == 0) | exhausted)
+        have_next = end_turn & (gqlen[wa] > 0)
+        next_g = ggq[wa, gqhead[wa]]
+        cur_grp = mset(cur_grp, wa, have_next, next_g)
+        g_inq = g_inq.at[jnp.where(have_next, wa, oob_a), next_g].set(
+            False, mode="drop")
+        gqhead = (gqhead.at[wa].add(jnp.where(have_next, 1, 0), mode="drop")
+                  % G)
+        gqlen = gqlen.at[wa].add(jnp.where(have_next, -1, 0), mode="drop")
+        wake_q = mset(wake_q, wa, have_next, wa * G + next_g)
+        wake_tmr = mset(wake_tmr, wa, have_next, p.lat + 2)
+        turn_srv = mset(turn_srv, wa, have_next, 0)
+        cs["msgs"] = cs["msgs"] + 2 * have_next.sum()  # cross-cluster wake RT
+        # nothing left anywhere: the address goes idle
+        cur_grp = mset(cur_grp, wa, end_turn & ~have_next, -1)
+        cs["st"] = jnp.where(is_rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
+
+        bank.update(lqbuf=lqbuf, lqhead=lqhead, lqlen=lqlen, ggq=ggq,
+                    gqhead=gqhead, gqlen=gqlen, g_inq=g_inq,
+                    cur_grp=cur_grp, turn_srv=turn_srv,
+                    wake_tmr=wake_tmr, wake_q=wake_q)
+        return cs, bank
+
+    def on_wake(self, ctx, cs, bank):
+        G, _, cap_l = self._geom(ctx.p, ctx.n)
+        wake_tmr, wq = bank["wake_tmr"], bank["wake_q"]
+        lqbuf, lqhead, lqlen = bank["lqbuf"], bank["lqhead"], bank["lqlen"]
+        fire = wake_tmr == 1
+        wake_tmr = jnp.maximum(wake_tmr - 1, 0)
+        head_core = lqbuf[wq, lqhead[wq]]
+        valid = fire & (lqlen[wq] > 0)
+        fire_core = jnp.where(valid, head_core, ctx.n)
+        woken = jnp.zeros((ctx.n,), bool).at[fire_core].set(True, mode="drop")
+        cs["st"] = jnp.where(woken, MOD, cs["st"])
+        cs["tmr"] = jnp.where(woken, ctx.p.modify, cs["tmr"])
+        # pop the woken head: it is now the address's active holder
+        oob = jnp.where(valid, wq, ctx.a * G)
+        lqhead = (lqhead.at[oob].add(1, mode="drop")) % cap_l
+        lqlen = lqlen.at[oob].add(-1, mode="drop")
+        bank.update(wake_tmr=wake_tmr, lqhead=lqhead, lqlen=lqlen)
+        return cs, bank, (wake_tmr == 1).sum()

@@ -1,0 +1,104 @@
+"""Spin-lock baselines protecting the bin: ``amo_lock``, ``lrsc_lock``,
+``ticket_lock``.
+
+* ``amo_lock``    — test&set via a single AMO; failed attempts back off
+                    with the paper's fixed 128-cycle policy and re-poll.
+* ``lrsc_lock``   — the same lock built from an LR/SC pair: two round
+                    trips per acquire attempt and double the messages.
+* ``ticket_lock`` — FIFO spin lock: the first attempt draws a ticket from
+                    the bank's dispenser; re-polls re-check ``serving``
+                    against the core's held ticket.  Still polling-based
+                    (retry traffic like ``amo_lock``) but grants strictly
+                    in ticket order — the classic fairness/polling
+                    trade-off point between test&set and Mwait queues.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
+                                       RESP, Protocol, mset)
+from repro.core.protocols.registry import register
+
+
+class SpinLock(Protocol):
+    fixed_backoff = True
+    lr_pair = False          # lrsc_lock: LR+SC = two round trips per attempt
+
+    def init_bank_state(self, p, a, n, q_cap):
+        return dict(lock=jnp.zeros((a,), bool))
+
+    def on_access(self, ctx, cs, bank):
+        p, wa = ctx.p, ctx.wa
+        is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        lock = bank["lock"]
+        acq_rt = 2 * p.lat if self.lr_pair else p.lat
+        free = ~lock[wa]
+        got = is_acq & free
+        fail = is_acq & ~free
+        lock = mset(lock, wa, got, True)
+        cs["st"] = jnp.where(is_acq, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_acq, acq_rt, cs["tmr"])
+        cs["nxt"] = jnp.where(got, NXT_MOD,
+                              jnp.where(fail, NXT_BACKOFF, cs["nxt"]))
+        cs["polls"] = cs["polls"] + fail.sum()
+        if self.lr_pair:
+            cs["msgs"] = cs["msgs"] + 2 * is_acq.sum()
+        rel = is_rel
+        lock = mset(lock, wa, rel, False)
+        cs["st"] = jnp.where(rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(rel, NXT_WORK_DONE, cs["nxt"])
+        bank["lock"] = lock
+        return cs, bank
+
+
+@register
+class AmoLock(SpinLock):
+    name = "amo_lock"
+
+
+@register
+class LrscLock(SpinLock):
+    name = "lrsc_lock"
+    lr_pair = True
+
+
+@register
+class TicketLock(Protocol):
+    name = "ticket_lock"
+    fixed_backoff = True
+
+    def init_bank_state(self, p, a, n, q_cap):
+        return dict(
+            next_tkt=jnp.zeros((a,), jnp.int32),
+            serving=jnp.zeros((a,), jnp.int32),
+        )
+
+    def init_core_state(self, p, n):
+        return dict(tkt=jnp.full((n,), -1, jnp.int32))
+
+    def on_access(self, ctx, cs, bank):
+        p, wa = ctx.p, ctx.wa
+        is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        next_tkt, serving = bank["next_tkt"], bank["serving"]
+        # first attempt draws a ticket; re-polls keep the one they hold
+        draw = is_acq & (cs["tkt"] < 0)
+        my_tkt = jnp.where(draw, next_tkt[wa], cs["tkt"])
+        next_tkt = next_tkt.at[wa].add(jnp.where(draw, 1, 0), mode="drop")
+        cs["tkt"] = jnp.where(is_acq, my_tkt, cs["tkt"])
+        got = is_acq & (my_tkt == serving[wa])
+        fail = is_acq & ~got
+        cs["st"] = jnp.where(is_acq, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_acq, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(got, NXT_MOD,
+                              jnp.where(fail, NXT_BACKOFF, cs["nxt"]))
+        cs["polls"] = cs["polls"] + fail.sum()
+        # release: advance the serving counter, drop the ticket
+        serving = serving.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
+        cs["tkt"] = jnp.where(is_rel, -1, cs["tkt"])
+        cs["st"] = jnp.where(is_rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
+        bank["next_tkt"], bank["serving"] = next_tkt, serving
+        return cs, bank

@@ -1,0 +1,47 @@
+"""``lrsc`` — MemPool-style LR/SC with ONE reservation slot per bank.
+
+An LR takes the slot only if free; otherwise it still gets the value but
+its SC is doomed (the "sacrificed non-blocking property").  Failed SC →
+backoff → full LRSC retry: the retry storm the paper measures.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
+                                       RESP, Protocol, mset)
+from repro.core.protocols.registry import register
+
+
+@register
+class Lrsc(Protocol):
+    name = "lrsc"
+
+    def init_bank_state(self, p, a, n, q_cap):
+        return dict(
+            resv_core=jnp.full((a,), -1, jnp.int32),
+            resv_valid=jnp.zeros((a,), bool),
+        )
+
+    def on_access(self, ctx, cs, bank):
+        p, wa, wc = ctx.p, ctx.wa, ctx.wc
+        is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        resv_core, resv_valid = bank["resv_core"], bank["resv_valid"]
+        free_slot = ~resv_valid[wa]
+        got_resv = is_acq & free_slot
+        resv_core = mset(resv_core, wa, got_resv, wc)
+        resv_valid = mset(resv_valid, wa, got_resv, True)
+        cs["st"] = jnp.where(is_acq, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_acq, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(is_acq, NXT_MOD, cs["nxt"])
+        # SC: succeeds iff holding the reservation; owner's SC releases it
+        owner = is_rel & resv_valid[wa] & (resv_core[wa] == wc)
+        fail = is_rel & ~owner
+        resv_valid = mset(resv_valid, wa, owner, False)
+        cs["st"] = jnp.where(is_rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(owner, NXT_WORK_DONE,
+                              jnp.where(fail, NXT_BACKOFF, cs["nxt"]))
+        cs["polls"] = cs["polls"] + fail.sum()
+        bank["resv_core"], bank["resv_valid"] = resv_core, resv_valid
+        return cs, bank

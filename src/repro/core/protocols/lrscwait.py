@@ -1,0 +1,76 @@
+"""``lrscwait`` — LRwait/SCwait with q reservation slots per bank.
+
+Linearizes contending RMWs at the LR: an LRwait to a non-empty queue
+enqueues and the core sleeps (no polling); the SCwait always succeeds and
+wakes the next head.  With q ≥ N this is LRSCwait_ideal; an LRwait to a
+FULL queue fails immediately and falls back to retry traffic (the
+capacity collapse of Fig. 3's ``LRSCwait_q`` lines).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
+                                       RESP, SLEEP, Protocol, mset)
+from repro.core.protocols.registry import register
+
+
+@register
+class LrscWait(Protocol):
+    name = "lrscwait"
+    uses_queue = True
+    #: colibri: SuccessorUpdate on enqueue-behind + WakeUpRequest round trip
+    successor_updates = False
+
+    def q_cap(self, p, n):
+        return min(p.q_slots, n)
+
+    def wake_delay(self, p):
+        return p.lat
+
+    def init_bank_state(self, p, a, n, q_cap):
+        return dict(
+            qbuf=jnp.full((a, q_cap), -1, jnp.int32),
+            qhead=jnp.zeros((a,), jnp.int32),
+            qlen=jnp.zeros((a,), jnp.int32),
+            wake_tmr=jnp.zeros((a,), jnp.int32),
+        )
+
+    def on_access(self, ctx, cs, bank):
+        p, wa, wc, q_cap = ctx.p, ctx.wa, ctx.wc, ctx.q_cap
+        is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        qbuf, qhead, qlen = bank["qbuf"], bank["qhead"], bank["qlen"]
+        empty = qlen[wa] == 0
+        full = qlen[wa] >= q_cap
+        grant = is_acq & empty
+        enq = is_acq & ~empty & ~full
+        rej = is_acq & full                  # finite-q immediate fail
+        slot = (qhead[wa] + qlen[wa]) % q_cap
+        put = grant | enq
+        oob = jnp.full_like(wa, ctx.a)
+        qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
+        qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
+        cs["st"] = jnp.where(grant, RESP, jnp.where(enq, SLEEP, cs["st"]))
+        cs["tmr"] = jnp.where(grant, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(grant, NXT_MOD, cs["nxt"])
+        cs["st"] = jnp.where(rej, RESP, cs["st"])
+        cs["tmr"] = jnp.where(rej, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(rej, NXT_BACKOFF, cs["nxt"])
+        cs["polls"] = cs["polls"] + rej.sum()
+        # colibri SuccessorUpdate traffic on enqueue-behind
+        if self.successor_updates:
+            cs["msgs"] = cs["msgs"] + 2 * enq.sum()
+        # SCwait: always valid (only the head ever gets a response)
+        qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
+                 % q_cap)
+        qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
+        cs["st"] = jnp.where(is_rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
+        pend = is_rel & (qlen[wa] > 0)
+        bank["wake_tmr"] = mset(bank["wake_tmr"], wa, pend,
+                                self.wake_delay(p))
+        if self.successor_updates:
+            cs["msgs"] = cs["msgs"] + 2 * pend.sum()  # WakeUpRequest + resp
+        bank["qbuf"], bank["qhead"], bank["qlen"] = qbuf, qhead, qlen
+        return cs, bank

@@ -1,0 +1,57 @@
+"""``mwait_lock`` — MCS queue lock where waiters sleep via Mwait.
+
+Contenders enqueue at the bank and sleep (Mwait setup costs messages);
+the releaser wakes its successor directly — polling-free, but every
+critical section pays lock-management round trips that the direct
+LRSCwait RMW avoids.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import (NXT_MOD, NXT_WORK_DONE, RESP, SLEEP,
+                                       Protocol, mset)
+from repro.core.protocols.registry import register
+
+
+@register
+class MwaitLock(Protocol):
+    name = "mwait_lock"
+    uses_queue = True
+    fixed_backoff = True
+
+    def init_bank_state(self, p, a, n, q_cap):
+        return dict(
+            qbuf=jnp.full((a, q_cap), -1, jnp.int32),
+            qhead=jnp.zeros((a,), jnp.int32),
+            qlen=jnp.zeros((a,), jnp.int32),
+            wake_tmr=jnp.zeros((a,), jnp.int32),
+        )
+
+    def on_access(self, ctx, cs, bank):
+        p, wa, wc, q_cap = ctx.p, ctx.wa, ctx.wc, ctx.q_cap
+        is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        qbuf, qhead, qlen = bank["qbuf"], bank["qhead"], bank["qlen"]
+        empty = qlen[wa] == 0
+        grant = is_acq & empty
+        enq = is_acq & ~empty
+        slot = (qhead[wa] + qlen[wa]) % q_cap
+        put = grant | enq
+        oob = jnp.full_like(wa, ctx.a)
+        qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
+        qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
+        cs["st"] = jnp.where(grant, RESP, jnp.where(enq, SLEEP, cs["st"]))
+        cs["tmr"] = jnp.where(grant, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(grant, NXT_MOD, cs["nxt"])
+        cs["msgs"] = cs["msgs"] + 2 * enq.sum()          # Mwait setup
+        qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
+                 % q_cap)
+        qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
+        cs["st"] = jnp.where(is_rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
+        pend = is_rel & (qlen[wa] > 0)
+        # releaser wakes the successor: one response latency + Qnode bounce
+        bank["wake_tmr"] = mset(bank["wake_tmr"], wa, pend, p.lat + 2)
+        bank["qbuf"], bank["qhead"], bank["qlen"] = qbuf, qhead, qlen
+        return cs, bank

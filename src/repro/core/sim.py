@@ -1,4 +1,4 @@
-"""Vectorized cycle-level simulator of an SPM manycore (MemPool-like).
+"""Vectorized cycle-level engine of an SPM manycore (MemPool-like).
 
 This is the **faithful reproduction** layer: the paper's claims are
 behavioural properties of the synchronization protocols (retries, polling
@@ -17,29 +17,26 @@ Machine model
 * Every core runs: local work (``work`` cycles) → atomic RMW on a
   pseudo-random address (``modify`` cycles between load and store) → repeat.
 
-Protocols (paper Sections III–IV)
----------------------------------
-* ``amo``        — single-instruction atomic add (Fig. 3 roofline).
-* ``lrsc``       — MemPool LRSC: ONE reservation slot per bank, an LR
-                   overwrites the previous reservation ⇒ SC retry storms.
-                   Failed SC → backoff (default 128) → full LRSC retry.
-* ``lrscwait``   — q reservation slots, linearized at the LR (q ≥ N =
-                   LRSCwait_ideal). LR to a full queue fails immediately.
-* ``colibri``    — LRSCwait with unbounded (distributed) queue; the wakeup
-                   takes an extra round trip (SCwait→Qnode→WakeUpRequest→
-                   memory→LR response) and SuccessorUpdates add traffic.
-* ``amo_lock``   — test&set spin lock with backoff protecting the bin.
-* ``lrsc_lock``  — spin lock built from an LRSC pair (two round trips per
-                   attempt) with backoff.
-* ``mwait_lock`` — MCS queue lock where waiters sleep via Mwait and are
-                   woken by the releaser (polling-free).
+Protocols
+---------
+What happens when an arbitrated request reaches its bank is owned by a
+protocol *plugin* (``core.protocols``): the engine here keeps only the
+protocol-agnostic machinery — per-core timers and state transitions, the
+backoff policy, worker traffic, network acceptance with head-of-line
+blocking, and per-bank FIFO arbitration.  ``PROTOCOLS`` lists the paper's
+seven; ``repro.core.protocols.names()`` lists everything registered
+(including ``colibri_hier`` and ``ticket_lock``).
 
 All state lives in int32/bool arrays; one `lax.scan` step per cycle.
+Scalar parameters (seed, n_addrs, lat, work, ...) may be **traced** — the
+vmapped sweep runner (``core.sweep``) batches whole parameter grids
+through one compilation of this engine.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from types import SimpleNamespace
 from typing import Dict, Optional
 
 import jax
@@ -47,15 +44,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-# core states
-WORK, REQ, SLEEP, MOD, BACKOFF, RESP = 0, 1, 2, 3, 4, 5
-# request phases
-P_ACQ, P_REL = 0, 1
-# resp_next codes
-NXT_WORK_DONE, NXT_MOD, NXT_BACKOFF = 0, 1, 2
+from repro.core import protocols as proto_registry
+from repro.core.protocols.base import (BACKOFF, MOD, NXT_BACKOFF, NXT_MOD,
+                                       NXT_WORK_DONE, P_ACQ, P_REL, REQ,
+                                       RESP, SLEEP, WORK)
 
+#: the paper's seven protocols (Figs. 3–6); the registry may hold more.
 PROTOCOLS = ("amo", "lrsc", "lrscwait", "colibri",
              "amo_lock", "lrsc_lock", "mwait_lock")
+
+#: SimParams fields the engine accepts as traced scalars (sweep axes).
+DYN_FIELDS = ("seed", "n_addrs", "lat", "work", "modify", "backoff",
+              "backoff_exp", "net_bw", "hol_block", "n_workers")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +81,7 @@ class SimParams:
     hol_block: int = 16
     n_workers: int = 0               # Fig.5: cores streaming a matmul
     seed: int = 0
+    n_groups: int = 4                # colibri_hier: clusters of cores
 
 
 def _hash(x):
@@ -88,32 +89,36 @@ def _hash(x):
     return (x.astype(jnp.uint32) * jnp.uint32(2654435761)) >> 8
 
 
+def _resolve(p: SimParams, dyn: Optional[Dict] = None) -> SimpleNamespace:
+    """Parameter namespace handed to the engine and plugins.  Fields named
+    in ``dyn`` become traced scalars; everything else stays a Python int
+    (so the plain ``run`` path traces to exactly the constants it always
+    did)."""
+    vals = {f.name: getattr(p, f.name) for f in dataclasses.fields(p)}
+    if dyn:
+        for k, v in dyn.items():
+            if k not in DYN_FIELDS:
+                raise ValueError(f"{k!r} is not a sweepable field; "
+                                 f"sweep axes: {DYN_FIELDS}")
+            vals[k] = v
+    return SimpleNamespace(**vals)
 
 
-def _mset(arr, idx, mask, val):
-    """Masked scatter-set: only lanes with mask write; others dropped
-    (out-of-bounds index). Avoids duplicate-index races."""
-    oob = jnp.full_like(idx, arr.shape[0])
-    return arr.at[jnp.where(mask, idx, oob)].set(val, mode="drop")
-
-
-def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
-    proto = PROTOCOLS.index(p.protocol)
+def simulate(p: SimParams, dyn: Optional[Dict] = None
+             ) -> Dict[str, jnp.ndarray]:
+    """One engine run.  ``p`` is static (shapes, protocol, cycle count);
+    ``dyn`` optionally overrides ``DYN_FIELDS`` entries with traced
+    scalars — ``p.n_addrs`` then acts as the static bank allocation upper
+    bound while ``dyn["n_addrs"]`` is the live address count."""
+    proto = proto_registry.get(p.protocol)
     n, a = p.n_cores, p.n_addrs
-    is_wait = proto in (2, 3, 6)                 # queue-based protocols
-    is_lock = proto >= 4
-    q_cap = min(p.q_slots if proto == 2 else n, n)
-    # colibri & mwait: the WakeUpRequest is dispatched when the SCwait PASSES
-    # the Qnode, travelling in parallel with it — the successor's response
-    # costs one response latency plus a small Qnode bounce.
-    wake_delay = {3: p.lat + 2, 6: p.lat + 2}.get(proto, p.lat)
-    # lrsc_lock pays two round trips per acquire attempt
-    acq_rt = 2 * p.lat if proto == 5 else p.lat
-    msgs_per_attempt = {0: 2, 1: 4, 2: 4, 3: 6, 4: 2, 5: 4, 6: 4}[proto]
+    rp = _resolve(p, dyn)
+    q_cap = proto.q_cap(p, n)
+    exp_cap = 1 if proto.fixed_backoff else rp.backoff_exp
 
     state = dict(
         st=jnp.full((n,), WORK, jnp.int32),
-        tmr=(jnp.arange(n, dtype=jnp.int32) * 3) % (p.work + 1),  # stagger
+        tmr=(jnp.arange(n, dtype=jnp.int32) * 3) % (rp.work + 1),  # stagger
         addr=jnp.zeros((n,), jnp.int32),
         phase=jnp.zeros((n,), jnp.int32),
         nxt=jnp.zeros((n,), jnp.int32),
@@ -123,14 +128,8 @@ def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
         opc=jnp.zeros((n,), jnp.int32),          # per-core op counter
         streak=jnp.zeros((n,), jnp.int32),       # consecutive failures
         ops=jnp.zeros((n,), jnp.int32),          # completed ops
-        # bank state
-        resv_core=jnp.full((a,), -1, jnp.int32),
-        resv_valid=jnp.zeros((a,), bool),
-        lock=jnp.zeros((a,), bool),
-        qbuf=jnp.full((a, q_cap), -1, jnp.int32),
-        qhead=jnp.zeros((a,), jnp.int32),
-        qlen=jnp.zeros((a,), jnp.int32),
-        wake_tmr=jnp.zeros((a,), jnp.int32),
+        bank=proto.init_bank_state(p, a, n, q_cap),
+        xc=proto.init_core_state(p, n),
         # stats
         msgs=jnp.zeros((), jnp.int32),
         polls=jnp.zeros((), jnp.int32),          # failed attempts (retries)
@@ -143,10 +142,15 @@ def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
         w_tmr=jnp.zeros((n,), jnp.int32),
         w_served=jnp.zeros((n,), jnp.int32),
     )
-    is_worker = jnp.arange(n) < p.n_workers      # first W cores are workers
+    xc_keys = tuple(state["xc"])
+    is_worker = jnp.arange(n) < rp.n_workers     # first W cores are workers
 
     def pick_addr(core, opc, cyc):
-        return (_hash(core * 7919 + opc * 104729 + p.seed) % a).astype(jnp.int32)
+        h = _hash(core * 7919 + opc * 104729 + rp.seed)
+        na = rp.n_addrs
+        if not isinstance(na, int):
+            na = na.astype(jnp.uint32)
+        return (h % na).astype(jnp.int32)
 
     def step(s, cyc):
         st, tmr = s["st"], s["tmr"]
@@ -159,39 +163,38 @@ def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
         addr = jnp.where(start, new_addr, s["addr"])
         st = jnp.where(start, REQ, st)
         phase = jnp.where(start, P_ACQ, s["phase"])
-        tmr = jnp.where(start, p.lat, tmr)
+        tmr = jnp.where(start, rp.lat, tmr)
 
         # ---- BACKOFF done -> reissue acquire ----
         rb = (st == BACKOFF) & (tmr == 0)
         st = jnp.where(rb, REQ, st)
         phase = jnp.where(rb, P_ACQ, phase)
-        tmr = jnp.where(rb, p.lat, tmr)
+        tmr = jnp.where(rb, rp.lat, tmr)
 
         # ---- MOD done -> issue release/SC ----
         md = (st == MOD) & (tmr == 0)
         st = jnp.where(md, REQ, st)
         phase = jnp.where(md, P_REL, phase)
-        tmr = jnp.where(md, p.lat, tmr)
+        tmr = jnp.where(md, rp.lat, tmr)
 
         # ---- RESP arrives ----
         ra = (st == RESP) & (tmr == 0)
         done = ra & (s["nxt"] == NXT_WORK_DONE)
         st = jnp.where(done, WORK, st)
-        tmr = jnp.where(done, p.work, tmr)
+        tmr = jnp.where(done, rp.work, tmr)
         ops = s["ops"] + done
         opc = s["opc"] + done
         to_mod = ra & (s["nxt"] == NXT_MOD)
         st = jnp.where(to_mod, MOD, st)
-        tmr = jnp.where(to_mod, p.modify, tmr)
+        tmr = jnp.where(to_mod, rp.modify, tmr)
         to_bo = ra & (s["nxt"] == NXT_BACKOFF)
         st = jnp.where(to_bo, BACKOFF, st)
         # lock protocols use the paper's stated FIXED backoff (Fig. 4 /
         # Table II: "spin locks with a backoff of 128 cycles"); bare LRSC
         # uses the calibrated exponential policy.
-        exp_cap = 1 if is_lock else p.backoff_exp
         streak = jnp.where(to_bo, jnp.minimum(s["streak"] + 1, exp_cap),
                            jnp.where(done, 0, s["streak"]))
-        bo_len = (p.backoff << jnp.maximum(streak - 1, 0)) + (_hash(
+        bo_len = (rp.backoff << jnp.maximum(streak - 1, 0)) + (_hash(
             jnp.arange(n) + cyc) % 32).astype(jnp.int32)
         tmr = jnp.where(to_bo, bo_len, tmr)
 
@@ -212,8 +215,13 @@ def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
         # responses issued last cycle share the same links, and parked
         # requests at saturated banks back up through switch buffers
         # (head-of-line blocking): both shrink the request budget.
-        hol = (s["parked"].sum() // p.hol_block) if p.hol_block else 0
-        budget = jnp.maximum(p.net_bw - s["resp_prev"] - hol, 1)
+        if isinstance(rp.hol_block, int):
+            hol = (s["parked"].sum() // rp.hol_block) if rp.hol_block else 0
+        else:
+            hol = jnp.where(rp.hol_block > 0,
+                            s["parked"].sum() // jnp.maximum(rp.hol_block, 1),
+                            0)
+        budget = jnp.maximum(rp.net_bw - s["resp_prev"] - hol, 1)
         accepted = all_req & (rank < budget)
         net_stall = s["net_stall"] + (all_req & ~accepted).sum()
         w_acc = w_arr & accepted
@@ -233,143 +241,38 @@ def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
         parked = parked & ~winner                    # served
         arr_cyc = jnp.where(winner, -1, arr_cyc)
 
-        wa, wc = addr, jnp.arange(n)             # per-core views
+        # ---- protocol plugin handles the bank winners ----
         is_acq = winner & (phase == P_ACQ)
         is_rel = winner & (phase == P_REL)
         bank_ops = s["bank_ops"] + winner.sum()
-        msgs = s["msgs"] + 2 * winner.sum()      # req + resp
-        resv_core, resv_valid = s["resv_core"], s["resv_valid"]
-        lock = s["lock"]
-        qbuf, qhead, qlen = s["qbuf"], s["qhead"], s["qlen"]
-        wake_tmr = s["wake_tmr"]
-        nxt = s["nxt"]
-        polls = s["polls"]
-
-        if proto == 0:                           # ---- amo ----
-            st = jnp.where(is_acq, RESP, st)
-            tmr = jnp.where(is_acq, p.lat, tmr)
-            nxt = jnp.where(is_acq, NXT_WORK_DONE, nxt)
-
-        elif proto == 1:                         # ---- lrsc ----
-            # MemPool LRSC: ONE sticky reservation slot per bank. An LR takes
-            # the slot only if free; otherwise it still gets the value but its
-            # SC is doomed (the "sacrificed non-blocking property").
-            free_slot = ~resv_valid[wa]
-            got_resv = is_acq & free_slot
-            resv_core = _mset(resv_core, wa, got_resv, wc)
-            resv_valid = _mset(resv_valid, wa, got_resv, True)
-            st = jnp.where(is_acq, RESP, st)
-            tmr = jnp.where(is_acq, p.lat, tmr)
-            nxt = jnp.where(is_acq, NXT_MOD, nxt)
-            # SC: succeeds iff holding the reservation; owner's SC releases it
-            owner = is_rel & resv_valid[wa] & (resv_core[wa] == wc)
-            fail = is_rel & ~owner
-            resv_valid = _mset(resv_valid, wa, owner, False)
-            st = jnp.where(is_rel, RESP, st)
-            tmr = jnp.where(is_rel, p.lat, tmr)
-            nxt = jnp.where(owner, NXT_WORK_DONE,
-                            jnp.where(fail, NXT_BACKOFF, nxt))
-            polls = polls + fail.sum()
-
-        elif proto in (2, 3):                    # ---- lrscwait / colibri ----
-            empty = qlen[wa] == 0
-            full = qlen[wa] >= q_cap
-            grant = is_acq & empty
-            enq = is_acq & ~empty & ~full
-            rej = is_acq & full                  # finite-q immediate fail
-            slot = (qhead[wa] + qlen[wa]) % q_cap
-            put = grant | enq
-            oob = jnp.full_like(wa, a)
-            qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
-            qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
-            st = jnp.where(grant, RESP, jnp.where(enq, SLEEP, st))
-            tmr = jnp.where(grant, p.lat, tmr)
-            nxt = jnp.where(grant, NXT_MOD, nxt)
-            st = jnp.where(rej, RESP, st)
-            tmr = jnp.where(rej, p.lat, tmr)
-            nxt = jnp.where(rej, NXT_BACKOFF, nxt)
-            polls = polls + rej.sum()
-            # colibri SuccessorUpdate traffic on enqueue-behind
-            if proto == 3:
-                msgs = msgs + 2 * enq.sum()
-            # SCwait: always valid (only the head ever gets a response)
-            qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
-                     % q_cap)
-            qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
-            st = jnp.where(is_rel, RESP, st)
-            tmr = jnp.where(is_rel, p.lat, tmr)
-            nxt = jnp.where(is_rel, NXT_WORK_DONE, nxt)
-            pend = is_rel & (qlen[wa] > 0)
-            wake_tmr = _mset(wake_tmr, wa, pend, wake_delay)
-            if proto == 3:
-                msgs = msgs + 2 * pend.sum()     # WakeUpRequest + response
-
-        elif proto in (4, 5):                    # ---- spin locks ----
-            free = ~lock[wa]
-            got = is_acq & free
-            fail = is_acq & ~free
-            lock = _mset(lock, wa, got, True)
-            st = jnp.where(is_acq, RESP, st)
-            tmr = jnp.where(is_acq, acq_rt, tmr)
-            nxt = jnp.where(got, NXT_MOD, jnp.where(fail, NXT_BACKOFF, nxt))
-            polls = polls + fail.sum()
-            if proto == 5:
-                msgs = msgs + 2 * is_acq.sum()   # LR+SC = two round trips
-            rel = is_rel
-            lock = _mset(lock, wa, rel, False)
-            st = jnp.where(rel, RESP, st)
-            tmr = jnp.where(rel, p.lat, tmr)
-            nxt = jnp.where(rel, NXT_WORK_DONE, nxt)
-
-        else:                                    # ---- mwait MCS lock ----
-            empty = qlen[wa] == 0
-            grant = is_acq & empty
-            enq = is_acq & ~empty
-            slot = (qhead[wa] + qlen[wa]) % q_cap
-            put = grant | enq
-            oob = jnp.full_like(wa, a)
-            qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
-            qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
-            st = jnp.where(grant, RESP, jnp.where(enq, SLEEP, st))
-            tmr = jnp.where(grant, p.lat, tmr)
-            nxt = jnp.where(grant, NXT_MOD, nxt)
-            msgs = msgs + 2 * enq.sum()          # Mwait setup
-            qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
-                     % q_cap)
-            qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
-            st = jnp.where(is_rel, RESP, st)
-            tmr = jnp.where(is_rel, p.lat, tmr)
-            nxt = jnp.where(is_rel, NXT_WORK_DONE, nxt)
-            pend = is_rel & (qlen[wa] > 0)
-            wake_tmr = _mset(wake_tmr, wa, pend, wake_delay)
+        cs = dict(st=st, tmr=tmr, nxt=s["nxt"], polls=s["polls"],
+                  msgs=s["msgs"] + 2 * winner.sum(),      # req + resp
+                  **{k: s["xc"][k] for k in xc_keys})
+        ctx = proto_registry.Ctx(p=rp, n=n, a=a, q_cap=q_cap,
+                                 is_acq=is_acq, is_rel=is_rel,
+                                 wa=addr, wc=jnp.arange(n))
+        cs, bank = proto.on_access(ctx, cs, dict(s["bank"]))
 
         # ---- wakeups (queue-based protocols) ----
-        if is_wait or proto == 6:
-            fire = wake_tmr == 1
-            wake_tmr = jnp.maximum(wake_tmr - 1, 0)
-            head_core = qbuf[jnp.arange(a), qhead]
-            # wake the head core of each firing queue
-            fire_core = jnp.where(fire & (qlen > 0), head_core, n)
-            woken = jnp.zeros((n,), bool).at[fire_core].set(True, mode="drop")
-            st = jnp.where(woken, MOD, st)
-            tmr = jnp.where(woken, p.modify, tmr)
+        wake_load = jnp.zeros((), jnp.int32)
+        if proto.uses_queue:
+            cs, bank, wake_load = proto.on_wake(ctx, cs, bank)
 
         # network slots consumed by this cycle's responses and protocol
         # side-messages (SuccessorUpdate / WakeUpRequest / Mwait setup)
-        extra = msgs - s["msgs"] - 2 * winner.sum()
-        resp_load = winner.sum() + w_acc.sum() + extra
-        if is_wait or proto == 6:
-            resp_load = resp_load + (wake_tmr == 1).sum()
+        st, tmr = cs["st"], cs["tmr"]
+        extra = cs["msgs"] - s["msgs"] - 2 * winner.sum()
+        resp_load = winner.sum() + w_acc.sum() + extra + wake_load
         sleep_cyc = s["sleep_cyc"] + (st == SLEEP).sum()
         backoff_cyc = s["backoff_cyc"] + (st == BACKOFF).sum()
         active_cyc = s["active_cyc"] + ((st != SLEEP) & ~is_worker).sum()
 
-        out = dict(st=st, tmr=tmr, addr=addr, phase=phase, nxt=nxt, opc=opc,
-                   arr_cyc=arr_cyc, streak=streak, parked=parked,
+        out = dict(st=st, tmr=tmr, addr=addr, phase=phase, nxt=cs["nxt"],
+                   opc=opc, arr_cyc=arr_cyc, streak=streak, parked=parked,
                    resp_prev=resp_load.astype(jnp.int32),
-                   ops=ops, resv_core=resv_core, resv_valid=resv_valid,
-                   lock=lock, qbuf=qbuf, qhead=qhead, qlen=qlen,
-                   wake_tmr=wake_tmr, msgs=msgs, polls=polls,
+                   ops=ops, bank=bank,
+                   xc={k: cs[k] for k in xc_keys},
+                   msgs=cs["msgs"], polls=cs["polls"],
                    sleep_cyc=sleep_cyc, active_cyc=active_cyc,
                    backoff_cyc=backoff_cyc,
                    bank_ops=bank_ops, net_stall=net_stall,
@@ -377,7 +280,12 @@ def simulate(p: SimParams) -> Dict[str, jnp.ndarray]:
         return out, None
 
     final, _ = lax.scan(step, state, jnp.arange(p.cycles, dtype=jnp.int32))
-    return final
+    # flatten protocol state into the result dict (names never collide
+    # with engine keys)
+    flat = {k: v for k, v in final.items() if k not in ("bank", "xc")}
+    flat.update(final["bank"])
+    flat.update(final["xc"])
+    return flat
 
 
 @partial(jax.jit, static_argnums=0)
@@ -385,15 +293,26 @@ def _run(p: SimParams):
     return simulate(p)
 
 
+def derive_metrics(res: Dict[str, np.ndarray], n_workers: int,
+                   cycles: int) -> Dict[str, np.ndarray]:
+    """Attach throughput/fairness/worker metrics to a raw result dict.
+
+    Degenerate configurations (``n_workers == n_cores`` leaves no atomic
+    cores; ``n_workers == 0`` has no workers) consistently report 0.0
+    instead of crashing on empty slices.
+    """
+    ops = res["ops"][n_workers:] if n_workers else res["ops"]
+    res["throughput"] = float(ops.sum()) / cycles if ops.size else 0.0
+    res["fairness_min"] = float(ops.min()) / cycles if ops.size else 0.0
+    res["fairness_max"] = float(ops.max()) / cycles if ops.size else 0.0
+    if n_workers:
+        w = res["w_served"][:n_workers]
+        res["worker_rate"] = (float(w.sum()) / cycles / n_workers
+                              if w.size else 0.0)
+    return res
+
+
 def run(p: SimParams) -> Dict[str, np.ndarray]:
     out = _run(p)
     res = {k: np.asarray(v) for k, v in out.items()}
-    non_workers = p.n_cores - p.n_workers
-    ops = res["ops"][p.n_workers:] if p.n_workers else res["ops"]
-    res["throughput"] = float(ops.sum()) / p.cycles          # updates/cycle
-    res["fairness_min"] = float(ops.min()) / p.cycles if non_workers else 0.0
-    res["fairness_max"] = float(ops.max()) / p.cycles if non_workers else 0.0
-    if p.n_workers:
-        res["worker_rate"] = float(res["w_served"][: p.n_workers].sum()) \
-            / p.cycles / p.n_workers
-    return res
+    return derive_metrics(res, min(p.n_workers, p.n_cores), p.cycles)

@@ -1,0 +1,88 @@
+"""Batched parameter sweeps: jit the engine once, ``vmap`` the grid.
+
+The benchmark figures each run dozens of ``SimParams`` configurations.
+``sim.run`` jits per *static* parameter set, so a sweep over
+``(seed, n_addrs, lat, work, ...)`` used to pay one full XLA compile per
+point.  This runner groups configurations by their static fingerprint
+(protocol, core count, cycle count, queue capacity, group count), lifts
+every other scalar into a traced axis (``sim.DYN_FIELDS``), and runs each
+group through a single ``jax.vmap``-ed compilation of the engine.
+
+``n_addrs`` is traced too: the engine allocates banks for the group's
+maximum and runs the live count through the address hash, so mixed
+contention levels share one compile.  Results are **identical** to
+per-config ``sim.run`` calls — all engine state is integer, and the
+traced scalars feed the same arithmetic the Python constants did
+(``tests/test_sweep.py`` locks this in).
+
+EXPERIMENTS.md §Sweep records the measured speedup; the ``sweep_speedup``
+benchmark (``benchmarks/bench_sweep.py``) regenerates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import (DYN_FIELDS, SimParams, derive_metrics, simulate)
+
+#: fields that must match for configs to share one compilation
+STATIC_FIELDS = ("protocol", "n_cores", "cycles", "q_slots", "n_groups")
+
+
+def _static_key(p: SimParams):
+    return tuple(getattr(p, f) for f in STATIC_FIELDS)
+
+
+@partial(jax.jit, static_argnums=0)
+def _sweep_group(rep: SimParams, dyn: Dict[str, jnp.ndarray]):
+    return jax.vmap(lambda d: simulate(rep, dyn=d))(dyn)
+
+
+def sweep(configs: Sequence[SimParams]) -> List[Dict[str, np.ndarray]]:
+    """Run every configuration; returns one result dict per config (same
+    keys and values as ``sim.run``), in input order.
+
+    Configurations sharing a static fingerprint are batched through one
+    vmapped compile; a heterogeneous list degrades gracefully to one
+    compile per fingerprint.
+    """
+    groups: Dict[tuple, List[int]] = {}
+    for i, c in enumerate(configs):
+        groups.setdefault(_static_key(c), []).append(i)
+    results: List[Dict[str, np.ndarray]] = [None] * len(configs)  # type: ignore
+    for idxs in groups.values():
+        grp = [configs[i] for i in idxs]
+        # bank allocation covers the group's largest address space
+        rep = dataclasses.replace(grp[0], n_addrs=max(c.n_addrs for c in grp))
+        dyn = {f: jnp.asarray([getattr(c, f) for c in grp], jnp.int32)
+               for f in DYN_FIELDS}
+        out = _sweep_group(rep, dyn)
+        out_np = {k: np.asarray(v) for k, v in out.items()}
+        for j, i in enumerate(idxs):
+            res = {k: v[j] for k, v in out_np.items()}
+            results[i] = derive_metrics(
+                res, min(configs[i].n_workers, configs[i].n_cores),
+                configs[i].cycles)
+    return results
+
+
+def sweep_grid(base: SimParams, **axes: Sequence) -> List[Dict[str, np.ndarray]]:
+    """Cartesian sweep: ``sweep_grid(base, n_addrs=(1, 16), seed=(0, 1))``
+    runs every combination (last axis fastest) and returns results plus a
+    ``_config`` entry recording each point's SimParams."""
+    for name in axes:
+        if name not in DYN_FIELDS:
+            raise ValueError(f"{name!r} is not sweepable; axes: {DYN_FIELDS}")
+    points = [base]
+    for name, values in axes.items():
+        points = [dataclasses.replace(pt, **{name: v})
+                  for pt in points for v in values]
+    results = sweep(points)
+    for pt, res in zip(points, results):
+        res["_config"] = pt
+    return results

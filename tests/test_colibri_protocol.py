@@ -10,6 +10,8 @@ from __future__ import annotations
 import random
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.colibri import ColibriSystem

@@ -7,6 +7,9 @@ equivalence with the retry-based (scatter-add) baseline.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dispatch as D

@@ -1,0 +1,79 @@
+"""Oracle coverage for ``dispatch.ordered_segment_reduce`` beyond the
+``add`` path: ``max`` / ``min`` flavours and empty bins, cross-checked
+against the retry-based native-scatter oracle (``lrsc_scatter_add`` and
+its max/min analogues built from ``.at[].max/.min``).
+
+Deliberately hypothesis-free so the reduce paths stay exercised on
+minimal installs (the property suites in ``test_dispatch.py`` skip when
+hypothesis is absent).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch as D
+
+
+def _native_scatter(keys, vals, bins, op):
+    """The XLA duplicate-combining scatter — the SPMD analogue of the SC
+    retry loop that ordered_segment_reduce replaces."""
+    ident = {"max": -jnp.inf, "min": jnp.inf}[op]
+    init = jnp.full((bins,), ident, jnp.float32)
+    upd = getattr(init.at[keys], op)(vals)       # .at[].max / .at[].min
+    return upd
+
+
+def _cases():
+    rng = np.random.RandomState(42)
+    for n, bins in [(1, 1), (7, 3), (50, 8), (500, 40), (300, 17)]:
+        keys = rng.randint(0, bins, size=n).astype(np.int32)
+        vals = rng.uniform(-100, 100, size=n).astype(np.float32)
+        yield keys, vals, bins
+    # guaranteed-empty bins: keys restricted to the lower half of the range
+    keys = rng.randint(0, 5, size=200).astype(np.int32)
+    vals = rng.uniform(-50, 50, size=200).astype(np.float32)
+    yield keys, vals, 16
+    # single hot bin amid many empties
+    yield np.full(64, 9, np.int32), np.arange(64, dtype=np.float32), 32
+
+
+@pytest.mark.parametrize("op", ["max", "min"])
+def test_segment_reduce_matches_native_scatter(op):
+    for keys, vals, bins in _cases():
+        out = D.ordered_segment_reduce(jnp.array(keys), jnp.array(vals),
+                                       bins, op=op)
+        ref = _native_scatter(jnp.array(keys), jnp.array(vals), bins, op)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("op,ident", [("max", -np.inf), ("min", np.inf)])
+def test_segment_reduce_empty_bins_get_identity(op, ident):
+    keys = jnp.array([0, 0, 3], jnp.int32)
+    vals = jnp.array([2.0, 7.0, -1.0], jnp.float32)
+    out = np.asarray(D.ordered_segment_reduce(keys, vals, 6, op=op))
+    occupied = {0: 7.0 if op == "max" else 2.0, 3: -1.0}
+    for b in range(6):
+        if b in occupied:
+            assert out[b] == occupied[b]
+        else:
+            assert out[b] == ident                # identity, not garbage
+
+
+def test_segment_reduce_add_matches_lrsc_oracle():
+    for keys, vals, bins in _cases():
+        out = D.ordered_segment_reduce(jnp.array(keys), jnp.array(vals),
+                                       bins, op="add")
+        ref = D.lrsc_scatter_add(jnp.array(keys), jnp.array(vals), bins)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_segment_reduce_all_bins_empty_variantless():
+    """Zero requests: every bin reports the identity."""
+    keys = jnp.zeros((0,), jnp.int32)
+    vals = jnp.zeros((0,), jnp.float32)
+    out_max = np.asarray(D.ordered_segment_reduce(keys, vals, 4, op="max"))
+    out_min = np.asarray(D.ordered_segment_reduce(keys, vals, 4, op="min"))
+    assert (out_max == -np.inf).all()
+    assert (out_min == np.inf).all()

@@ -1,0 +1,219 @@
+"""Protocol-plugin engine regression + new-protocol invariants.
+
+The golden values below were captured from the seed monolithic
+``sim.py`` (pre-refactor, commit 5dacbd5) — every seed protocol must
+produce *identical* ``ops``/``msgs``/``polls``/... through the plugin
+engine.  The new registry-only protocols (``ticket_lock``,
+``colibri_hier``) are checked against their defining invariants:
+FIFO/fairness for the ticket dispenser, polling-freedom + cluster
+round-robin fairness for hierarchical Colibri.
+"""
+import numpy as np
+import pytest
+
+from repro.core import protocols
+from repro.core.protocols.base import Protocol
+from repro.core.sim import PROTOCOLS, SimParams, run
+
+# the three capture configurations (seed=7..9 style stamps varied per cfg)
+GOLDEN_CONFIGS = (
+    dict(n_cores=64, n_addrs=1, cycles=3000, seed=1),
+    dict(n_cores=64, n_addrs=16, cycles=3000, seed=2),
+    dict(n_cores=128, n_addrs=4, cycles=2000, lat=3, work=6, modify=2,
+         net_bw=32, seed=3),
+)
+
+# ops/msgs/polls/... of the SEED simulator for protocol/config-index
+GOLDEN = {
+ "amo/0": {"ops": 2990, "msgs": 5990, "polls": 0, "sleep_cyc": 0,
+           "backoff_cyc": 0, "bank_ops": 2995, "net_stall": 0,
+           "ops_min": 46, "ops_max": 47},
+ "amo/1": {"ops": 9596, "msgs": 19200, "polls": 0, "sleep_cyc": 0,
+           "backoff_cyc": 0, "bank_ops": 9600, "net_stall": 0,
+           "ops_min": 149, "ops_max": 150},
+ "amo/2": {"ops": 7976, "msgs": 15976, "polls": 0, "sleep_cyc": 0,
+           "backoff_cyc": 0, "bank_ops": 7988, "net_stall": 5,
+           "ops_min": 62, "ops_max": 63},
+ "lrsc/0": {"ops": 164, "msgs": 3004, "polls": 585, "sleep_cyc": 0,
+            "backoff_cyc": 163358, "bank_ops": 1502, "net_stall": 0,
+            "ops_min": 0, "ops_max": 16},
+ "lrsc/1": {"ops": 1537, "msgs": 8384, "polls": 550, "sleep_cyc": 0,
+            "backoff_cyc": 125958, "bank_ops": 4192, "net_stall": 0,
+            "ops_min": 5, "ops_max": 41},
+ "lrsc/2": {"ops": 531, "msgs": 5614, "polls": 868, "sleep_cyc": 0,
+            "backoff_cyc": 224991, "bank_ops": 2807, "net_stall": 5,
+            "ops_min": 0, "ops_max": 18},
+ "lrscwait/0": {"ops": 226, "msgs": 1028, "polls": 0, "sleep_cyc": 183068,
+                "backoff_cyc": 0, "bank_ops": 514, "net_stall": 0,
+                "ops_min": 3, "ops_max": 4},
+ "lrscwait/1": {"ops": 3621, "msgs": 14594, "polls": 0, "sleep_cyc": 85759,
+                "backoff_cyc": 0, "bank_ops": 7297, "net_stall": 0,
+                "ops_min": 55, "ops_max": 58},
+ "lrscwait/2": {"ops": 1124, "msgs": 4736, "polls": 0, "sleep_cyc": 234432,
+                "backoff_cyc": 0, "bank_ops": 2368, "net_stall": 5,
+                "ops_min": 8, "ops_max": 9},
+ "colibri/0": {"ops": 196, "msgs": 1818, "polls": 0, "sleep_cyc": 183939,
+               "backoff_cyc": 0, "bank_ops": 455, "net_stall": 0,
+               "ops_min": 3, "ops_max": 4},
+ "colibri/1": {"ops": 3161, "msgs": 24720, "polls": 0, "sleep_cyc": 98536,
+               "backoff_cyc": 0, "bank_ops": 6374, "net_stall": 0,
+               "ops_min": 48, "ops_max": 51},
+ "colibri/2": {"ops": 874, "msgs": 7488, "polls": 0, "sleep_cyc": 238668,
+               "backoff_cyc": 0, "bank_ops": 1874, "net_stall": 19,
+               "ops_min": 6, "ops_max": 7},
+ "amo_lock/0": {"ops": 174, "msgs": 2732, "polls": 1017, "sleep_cyc": 0,
+                "backoff_cyc": 172636, "bank_ops": 1366, "net_stall": 0,
+                "ops_min": 0, "ops_max": 9},
+ "amo_lock/1": {"ops": 1632, "msgs": 8076, "polls": 764, "sleep_cyc": 0,
+                "backoff_cyc": 128388, "bank_ops": 4038, "net_stall": 0,
+                "ops_min": 9, "ops_max": 56},
+ "amo_lock/2": {"ops": 580, "msgs": 5062, "polls": 1367, "sleep_cyc": 0,
+                "backoff_cyc": 233012, "bank_ops": 2531, "net_stall": 5,
+                "ops_min": 0, "ops_max": 18},
+ "lrsc_lock/0": {"ops": 121, "msgs": 4734, "polls": 1001, "sleep_cyc": 0,
+                 "backoff_cyc": 169020, "bank_ops": 1244, "net_stall": 0,
+                 "ops_min": 0, "ops_max": 9},
+ "lrsc_lock/1": {"ops": 1239, "msgs": 10592, "polls": 780, "sleep_cyc": 0,
+                 "backoff_cyc": 131471, "bank_ops": 3269, "net_stall": 0,
+                 "ops_min": 3, "ops_max": 37},
+ "lrsc_lock/2": {"ops": 451, "msgs": 8186, "polls": 1368, "sleep_cyc": 0,
+                 "backoff_cyc": 230369, "bank_ops": 2272, "net_stall": 39,
+                 "ops_min": 0, "ops_max": 17},
+ "mwait_lock/0": {"ops": 196, "msgs": 1426, "polls": 0, "sleep_cyc": 183939,
+                  "backoff_cyc": 0, "bank_ops": 455, "net_stall": 0,
+                  "ops_min": 3, "ops_max": 4},
+ "mwait_lock/1": {"ops": 3161, "msgs": 18760, "polls": 0,
+                  "sleep_cyc": 98536, "backoff_cyc": 0, "bank_ops": 6374,
+                  "net_stall": 0, "ops_min": 48, "ops_max": 51},
+ "mwait_lock/2": {"ops": 874, "msgs": 5736, "polls": 0, "sleep_cyc": 238668,
+                  "backoff_cyc": 0, "bank_ops": 1874, "net_stall": 19,
+                  "ops_min": 6, "ops_max": 7},
+}
+
+# finite-queue rejection path and congested-link worker configs
+GOLDEN_EXTRA = {
+ "lrscwait_q8": (dict(n_cores=64, n_addrs=1, q_slots=8, cycles=3000, seed=4),
+                 {"ops": 222, "msgs": 2024, "polls": 560, "sleep_cyc": 20630,
+                  "backoff_cyc": 156604, "bank_ops": 1012, "net_stall": 0,
+                  "ops_min": 0, "ops_max": 10}),
+ "lrsc_workers": (dict(protocol="lrsc", n_cores=64, n_addrs=1, n_workers=8,
+                       net_bw=13, hol_block=16, cycles=3000, backoff=128,
+                       backoff_exp=1, seed=5),
+                  {"ops": 169, "msgs": 4452, "polls": 940, "sleep_cyc": 0,
+                   "backoff_cyc": 131007, "bank_ops": 2226, "net_stall": 177,
+                   "w_served": 11998, "ops_min": 0, "ops_max": 8}),
+ "colibri_workers": (dict(protocol="colibri", n_cores=64, n_addrs=1,
+                          n_workers=8, net_bw=13, hol_block=16, cycles=3000,
+                          backoff=128, backoff_exp=1, seed=5),
+                     {"ops": 196, "msgs": 1790, "polls": 0,
+                      "sleep_cyc": 160443, "backoff_cyc": 0, "bank_ops": 448,
+                      "net_stall": 354, "w_served": 11993,
+                      "ops_min": 0, "ops_max": 4}),
+}
+
+
+def _observe(r):
+    obs = {"ops": int(r["ops"].sum()), "msgs": int(r["msgs"]),
+           "polls": int(r["polls"]), "sleep_cyc": int(r["sleep_cyc"]),
+           "backoff_cyc": int(r["backoff_cyc"]),
+           "bank_ops": int(r["bank_ops"]), "net_stall": int(r["net_stall"]),
+           "ops_min": int(r["ops"].min()), "ops_max": int(r["ops"].max())}
+    if "w_served" in r:
+        obs["w_served"] = int(np.asarray(r["w_served"]).sum())
+    return obs
+
+
+@pytest.mark.parametrize("proto", PROTOCOLS)
+def test_plugin_engine_matches_seed_golden(proto):
+    """All seven seed protocols are numerically identical through the
+    registry-based engine."""
+    for i, cfg in enumerate(GOLDEN_CONFIGS):
+        r = run(SimParams(protocol=proto, **cfg))
+        obs = _observe(r)
+        want = GOLDEN[f"{proto}/{i}"]
+        assert {k: obs[k] for k in want} == want, (proto, i)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_EXTRA))
+def test_plugin_engine_matches_seed_golden_extra(name):
+    cfg, want = GOLDEN_EXTRA[name]
+    cfg = dict(cfg)
+    proto = cfg.pop("protocol", "lrscwait")
+    r = run(SimParams(protocol=proto, **cfg))
+    obs = _observe(r)
+    assert {k: obs[k] for k in want} == want, name
+
+
+def test_registry_contents_and_errors():
+    names = protocols.names()
+    for p in PROTOCOLS + ("ticket_lock", "colibri_hier"):
+        assert p in names
+    with pytest.raises(KeyError):
+        protocols.get("no_such_protocol")
+    with pytest.raises(ValueError):           # duplicate name rejected
+        @protocols.register
+        class Dup(Protocol):
+            name = "colibri"
+    with pytest.raises(ValueError):           # anonymous plugin rejected
+        protocols.register(Protocol)
+
+
+def test_ticket_lock_fifo_fairness():
+    """Ticket dispenser grants strictly in draw order: per-core completed
+    ops stay within one ticket round of each other, unlike the random
+    test&set winner of amo_lock."""
+    kw = dict(n_addrs=1, n_cores=64, cycles=8000, backoff=128, backoff_exp=1)
+    tkt = run(SimParams(protocol="ticket_lock", **kw))
+    amo = run(SimParams(protocol="amo_lock", **kw))
+    assert int(tkt["ops"].sum()) > 0
+    assert int(tkt["polls"]) > 0                        # still a spin lock
+    t_span = int(tkt["ops"].max()) - int(tkt["ops"].min())
+    a_span = int(amo["ops"].max()) - int(amo["ops"].min())
+    assert t_span <= 2                                  # FIFO service
+    assert t_span < a_span                              # fairer than t&s
+
+
+def test_colibri_hier_polling_free_and_fair():
+    """Hierarchical Colibri keeps the paper's headline properties: no
+    retries/polls ever, contenders sleep, and the turn budget bounds
+    cross-group unfairness."""
+    r = run(SimParams(protocol="colibri_hier", n_cores=64, n_addrs=1,
+                      cycles=8000))
+    assert int(r["polls"]) == 0
+    assert int(r["sleep_cyc"]) > 0
+    span = int(r["ops"].max()) - int(r["ops"].min())
+    assert span <= 3, span                             # round-robin groups
+    # conservation: bank ops == acquire+release traffic of completed ops
+    assert int(r["ops"].sum()) > 0
+
+
+def test_colibri_hier_tracks_flat_colibri():
+    """Cluster-local wakes should not lose throughput against flat
+    Colibri; at high contention they win (cheaper handoffs)."""
+    for bins in (1, 16):
+        hier = run(SimParams(protocol="colibri_hier", n_cores=64,
+                             n_addrs=bins, cycles=8000))
+        flat = run(SimParams(protocol="colibri", n_cores=64, n_addrs=bins,
+                             cycles=8000))
+        assert hier["throughput"] >= 0.8 * flat["throughput"]
+    assert int(hier["polls"]) == 0
+
+
+def test_colibri_hier_group_count_axis():
+    """More groups = more (smaller) local queues; all group counts stay
+    polling-free and make progress."""
+    for g in (1, 2, 8):
+        r = run(SimParams(protocol="colibri_hier", n_groups=g, n_cores=64,
+                          n_addrs=2, cycles=5000))
+        assert int(r["polls"]) == 0
+        assert int(r["ops"].sum()) > 0
+
+
+def test_degenerate_worker_configs_report_zero():
+    """n_workers == n_cores leaves no atomic cores: metrics are 0.0, not a
+    crash on empty slices."""
+    r = run(SimParams(protocol="colibri", n_cores=8, n_workers=8, n_addrs=1,
+                      cycles=500))
+    assert r["throughput"] == 0.0
+    assert r["fairness_min"] == 0.0 and r["fairness_max"] == 0.0
+    assert r["worker_rate"] > 0.0

@@ -1,0 +1,73 @@
+"""The vmapped sweep runner must be a pure batching transform: results
+identical to per-config ``sim.run``, regardless of how configs are
+grouped, padded (mixed ``n_addrs`` share one bank allocation), or
+ordered."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.sim import SimParams, run
+from repro.core.sweep import STATIC_FIELDS, sweep, sweep_grid
+
+EXACT_KEYS = ("ops", "msgs", "polls", "sleep_cyc", "backoff_cyc",
+              "bank_ops", "net_stall", "throughput", "fairness_min",
+              "fairness_max")
+
+
+def _assert_same(swept, ref):
+    for k in EXACT_KEYS:
+        assert np.array_equal(np.asarray(swept[k]), np.asarray(ref[k])), k
+
+
+def test_sweep_matches_run_mixed_axes():
+    """Mixed contention/latency/seed configs, two protocols: every point
+    equals its sequential run() twin exactly (integer engine state)."""
+    configs = [
+        SimParams(protocol="colibri", n_cores=32, cycles=1200, n_addrs=1),
+        SimParams(protocol="colibri", n_cores=32, cycles=1200, n_addrs=8,
+                  lat=3, seed=1),
+        SimParams(protocol="lrsc", n_cores=32, cycles=1200, n_addrs=4,
+                  work=6),
+        SimParams(protocol="lrsc", n_cores=32, cycles=1200, n_addrs=1,
+                  backoff=128, backoff_exp=1),
+    ]
+    for cfg, swept in zip(configs, sweep(configs)):
+        _assert_same(swept, run(cfg))
+
+
+def test_sweep_matches_run_queue_and_workers():
+    """Queue-based protocol with traced n_workers + head-of-line blocking
+    (the Fig.5 regime) through the sweep path."""
+    configs = [
+        SimParams(protocol="lrscwait", n_cores=32, cycles=1200, n_addrs=1,
+                  n_workers=w, net_bw=13, hol_block=16) for w in (0, 4, 8)
+    ]
+    for cfg, swept in zip(configs, sweep(configs)):
+        ref = run(cfg)
+        _assert_same(swept, ref)
+        if cfg.n_workers:
+            assert swept["worker_rate"] == ref["worker_rate"]
+
+
+def test_sweep_grid_product_order():
+    res = sweep_grid(SimParams(protocol="amo", n_cores=16, cycles=600),
+                     n_addrs=(1, 4), seed=(0, 1))
+    assert len(res) == 4
+    assert [(r["_config"].n_addrs, r["_config"].seed) for r in res] == \
+        [(1, 0), (1, 1), (4, 0), (4, 1)]
+    for r in res:
+        _assert_same(r, run(r["_config"]))
+
+
+def test_sweep_rejects_non_sweepable_axis():
+    with pytest.raises(ValueError):
+        sweep_grid(SimParams(), n_cores=(8, 16))
+
+
+def test_static_fields_cover_simparams():
+    """Every SimParams field is either a static grouping key or a sweep
+    axis — adding a field without classifying it should fail loudly."""
+    from repro.core.sim import DYN_FIELDS
+    fields = {f.name for f in dataclasses.fields(SimParams)}
+    assert fields == set(STATIC_FIELDS) | set(DYN_FIELDS)
