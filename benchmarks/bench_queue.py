@@ -1,38 +1,47 @@
 """Fig. 6 — concurrent queue ops/cycle vs. core count + fairness band.
 
-Queue ops = RMWs on 2 hot addresses (head/tail) with link-update modify
-time, fixed backoff for the retry protocols. Claims: Colibri sustains flat
-throughput to 256 cores and is the fairest (narrow min/max band); LRSC and
-the lock-based queue collapse at scale.  ``colibri_hier`` tracks flat
-Colibri while keeping most wake-ups inside a cluster.  Calibration
-residual: our collapse onset is 256 cores (paper: 64) — see
-EXPERIMENTS.md.
+Runs the registered ``ms_queue`` workload: each op is an enqueue RMW on
+the tail word linked to a dequeue RMW on the head word (the workload's
+canonical scenario supplies the two hot addresses and link-update
+modify time), with the paper's fixed backoff for the retry protocols.
+Claims: Colibri sustains flat throughput to 256 cores and is the
+fairest (narrow min/max band); LRSC and the lock-based queue collapse
+at scale.  ``colibri_hier`` tracks flat Colibri while keeping most
+wake-ups inside a cluster.  Calibration residuals: our collapse onset
+is 256 cores (paper: 64), and since PR 2 a queue *op* is the full
+enqueue+dequeue pair of the two-atomic program rather than the former
+single-RMW approximation — per-op throughput roughly halves and the
+headline ratios shift (EXPERIMENTS.md §Workloads records the deltas).
 
 Configs run through ``core.sweep`` — the core-count axis changes array
-shapes so each (protocol, cores) point still compiles separately, but the
-shared runner keeps the API uniform and batches any same-shape points.
+shapes so each (protocol, cores) point still compiles separately, but
+the shared runner keeps the API uniform and batches any same-shape
+points.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.core import workloads
 from repro.core.sim import SimParams
 from repro.core.sweep import sweep
 
 CORES = (2, 8, 32, 64, 128, 256)
 PROTOS = ("colibri", "colibri_hier", "lrsc", "amo_lock")
 CYCLES = 10_000
-KW = dict(n_addrs=2, modify=8, backoff=128, backoff_exp=1)
+KW = dict(backoff=128, backoff_exp=1, **workloads.get("ms_queue").scenario)
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    configs = [SimParams(protocol=proto, n_cores=n, cycles=cycles, **KW)
+    configs = [SimParams(protocol=proto, workload="ms_queue", n_cores=n,
+                         cycles=cycles, **KW)
                for proto in PROTOS for n in CORES]
     out = []
     for p, r in zip(configs, sweep(configs)):
         out.append({"figure": "fig6", "protocol": p.protocol,
                     "cores": p.n_cores,
                     "ops_per_cycle": r["throughput"],
+                    "atomics_per_cycle": float(r["opc"].sum()) / p.cycles,
                     "slowest_core": r["fairness_min"],
                     "fastest_core": r["fairness_max"]})
     return out

@@ -30,7 +30,8 @@ def _run(name, mod):
 def main(argv=None) -> None:
     from benchmarks import (bench_area, bench_energy, bench_histogram,
                             bench_interference, bench_locks, bench_queue,
-                            bench_scatter_kernel, bench_sweep)
+                            bench_scatter_kernel, bench_sweep,
+                            bench_workloads)
     benches = {
         "fig3_histogram": bench_histogram,
         "fig4_locks": bench_locks,
@@ -40,6 +41,7 @@ def main(argv=None) -> None:
         "table2_energy": bench_energy,
         "scatter_kernel": bench_scatter_kernel,
         "sweep_speedup": bench_sweep,
+        "workloads_grid": bench_workloads,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", metavar="NAME", default=None,

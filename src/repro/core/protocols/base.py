@@ -27,8 +27,8 @@ from typing import Any, Dict, Tuple
 
 import jax.numpy as jnp
 
-# core states
-WORK, REQ, SLEEP, MOD, BACKOFF, RESP = 0, 1, 2, 3, 4, 5
+# core states (BARWAIT: parked at a workload barrier, polling-free)
+WORK, REQ, SLEEP, MOD, BACKOFF, RESP, BARWAIT = 0, 1, 2, 3, 4, 5, 6
 # request phases
 P_ACQ, P_REL = 0, 1
 # resp_next codes
@@ -59,6 +59,11 @@ class Ctx:
     is_rel: jnp.ndarray      # (n,) bool — this cycle's release winners
     wa: jnp.ndarray          # (n,) int32 — each core's target bank
     wc: jnp.ndarray          # (n,) int32 — arange(n) core ids
+    #: (n,) int32 — each core's *current micro-op* modify duration.  The
+    #: engine interprets workload programs (``core.workloads``), so the
+    #: cycles between load and store are a per-step property, not the
+    #: global ``p.modify``; wake paths must grant with this value.
+    mod_dur: jnp.ndarray = None
 
 
 class Protocol:
@@ -103,6 +108,6 @@ class Protocol:
         fire_core = jnp.where(fire & (bank["qlen"] > 0), head_core, ctx.n)
         woken = jnp.zeros((ctx.n,), bool).at[fire_core].set(True, mode="drop")
         cs["st"] = jnp.where(woken, MOD, cs["st"])
-        cs["tmr"] = jnp.where(woken, ctx.p.modify, cs["tmr"])
+        cs["tmr"] = jnp.where(woken, ctx.mod_dur, cs["tmr"])
         bank["wake_tmr"] = wake_tmr
         return cs, bank, (wake_tmr == 1).sum()

@@ -153,7 +153,7 @@ class ColibriHier(Protocol):
         fire_core = jnp.where(valid, head_core, ctx.n)
         woken = jnp.zeros((ctx.n,), bool).at[fire_core].set(True, mode="drop")
         cs["st"] = jnp.where(woken, MOD, cs["st"])
-        cs["tmr"] = jnp.where(woken, ctx.p.modify, cs["tmr"])
+        cs["tmr"] = jnp.where(woken, ctx.mod_dur, cs["tmr"])
         # pop the woken head: it is now the address's active holder
         oob = jnp.where(valid, wq, ctx.a * G)
         lqhead = (lqhead.at[oob].add(1, mode="drop")) % cap_l

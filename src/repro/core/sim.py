@@ -14,8 +14,13 @@ Machine model
   global bandwidth cap of ``net_bw`` accepted requests per cycle
   (models MemPool's group-level interconnect; responsible for the Fig. 5
   interference effect).
-* Every core runs: local work (``work`` cycles) → atomic RMW on a
-  pseudo-random address (``modify`` cycles between load and store) → repeat.
+* Every core runs a per-core **program** owned by a workload plugin
+  (``core.workloads``): a micro-op table of local-work / atomic / barrier
+  steps interpreted with a per-core program counter.  The default
+  ``rmw_loop`` workload compiles to the seed behaviour — local work
+  (``work`` cycles) → atomic RMW on a pseudo-random address (``modify``
+  cycles between load and store) → repeat — and is bit-identical to the
+  pre-workload engine.
 
 Protocols
 ---------
@@ -45,9 +50,12 @@ import numpy as np
 from jax import lax
 
 from repro.core import protocols as proto_registry
-from repro.core.protocols.base import (BACKOFF, MOD, NXT_BACKOFF, NXT_MOD,
-                                       NXT_WORK_DONE, P_ACQ, P_REL, REQ,
-                                       RESP, SLEEP, WORK)
+from repro.core import workloads as wl_registry
+from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, NXT_BACKOFF,
+                                       NXT_MOD, NXT_WORK_DONE, P_ACQ, P_REL,
+                                       REQ, RESP, SLEEP, WORK)
+from repro.core.workloads.base import (ADDR_FIXED, ADDR_ZIPF, K_BARRIER,
+                                       zipf_index)
 
 #: the paper's seven protocols (Figs. 3–6); the registry may hold more.
 PROTOCOLS = ("amo", "lrsc", "lrscwait", "colibri",
@@ -55,12 +63,14 @@ PROTOCOLS = ("amo", "lrsc", "lrscwait", "colibri",
 
 #: SimParams fields the engine accepts as traced scalars (sweep axes).
 DYN_FIELDS = ("seed", "n_addrs", "lat", "work", "modify", "backoff",
-              "backoff_exp", "net_bw", "hol_block", "n_workers")
+              "backoff_exp", "net_bw", "hol_block", "n_workers",
+              "zipf_skew")
 
 
 @dataclasses.dataclass(frozen=True)
 class SimParams:
     protocol: str = "colibri"
+    workload: str = "rmw_loop"       # per-core program (core.workloads)
     n_cores: int = 256
     n_addrs: int = 1                 # contention: fewer addresses = hotter
     cycles: int = 20_000
@@ -82,6 +92,8 @@ class SimParams:
     n_workers: int = 0               # Fig.5: cores streaming a matmul
     seed: int = 0
     n_groups: int = 4                # colibri_hier: clusters of cores
+    zipf_skew: int = 100             # 100*s for ADDR_ZIPF streams (s=1.0)
+    record_trace: bool = False       # emit (cycles, n) completed-step trace
 
 
 def _hash(x):
@@ -111,6 +123,13 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
     scalars — ``p.n_addrs`` then acts as the static bank allocation upper
     bound while ``dyn["n_addrs"]`` is the live address count."""
     proto = proto_registry.get(p.protocol)
+    wl = wl_registry.get(p.workload)
+    if p.n_addrs < wl.min_addrs:
+        raise ValueError(f"workload {wl.name!r} needs n_addrs >= "
+                         f"{wl.min_addrs} (got {p.n_addrs})")
+    prog = wl.program(p)
+    pt = prog.tables()                   # static micro-op table (int32)
+    L = prog.length
     n, a = p.n_cores, p.n_addrs
     rp = _resolve(p, dyn)
     q_cap = proto.q_cap(p, n)
@@ -121,6 +140,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         tmr=(jnp.arange(n, dtype=jnp.int32) * 3) % (rp.work + 1),  # stagger
         addr=jnp.zeros((n,), jnp.int32),
         phase=jnp.zeros((n,), jnp.int32),
+        pc=jnp.zeros((n,), jnp.int32),           # program counter
+        bar_cnt=jnp.zeros((n,), jnp.int32),      # barrier arrivals
         nxt=jnp.zeros((n,), jnp.int32),
         arr_cyc=jnp.full((n,), -1, jnp.int32),   # FIFO arrival stamp
         parked=jnp.zeros((n,), bool),            # accepted, waiting at bank
@@ -133,7 +154,9 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         # stats
         msgs=jnp.zeros((), jnp.int32),
         polls=jnp.zeros((), jnp.int32),          # failed attempts (retries)
+        addr_ops=jnp.zeros((a,), jnp.int32),     # completed atomics per bank
         sleep_cyc=jnp.zeros((), jnp.int32),
+        bar_cyc=jnp.zeros((), jnp.int32),        # cycles parked at barriers
         backoff_cyc=jnp.zeros((), jnp.int32),
         active_cyc=jnp.zeros((), jnp.int32),
         bank_ops=jnp.zeros((), jnp.int32),
@@ -145,21 +168,30 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
     xc_keys = tuple(state["xc"])
     is_worker = jnp.arange(n) < rp.n_workers     # first W cores are workers
 
-    def pick_addr(core, opc, cyc):
+    def step_addr(core, opc, pc):
+        """Current micro-op's target address.  The uniform stream is the
+        seed engine's counter hash, bit-identical under ``rmw_loop``."""
         h = _hash(core * 7919 + opc * 104729 + rp.seed)
         na = rp.n_addrs
         if not isinstance(na, int):
             na = na.astype(jnp.uint32)
-        return (h % na).astype(jnp.int32)
+        uni = (h % na).astype(jnp.int32)
+        fix = (pt["addr_arg"][pc].astype(jnp.uint32) % na).astype(jnp.int32)
+        mode = pt["addr_mode"][pc]
+        out = jnp.where(mode == ADDR_FIXED, fix, uni)
+        if int(np.any(np.asarray(prog.addr_mode) == ADDR_ZIPF)):
+            out = jnp.where(mode == ADDR_ZIPF,
+                            zipf_index(h, rp.n_addrs, rp.zipf_skew), out)
+        return out
 
     def step(s, cyc):
-        st, tmr = s["st"], s["tmr"]
+        st, tmr, pc = s["st"], s["tmr"], s["pc"]
         # ---- timers ----
         tmr = jnp.maximum(tmr - 1, 0)
 
-        # ---- WORK done -> issue acquire ----
+        # ---- WORK done -> issue current micro-op's acquire ----
         start = (st == WORK) & (tmr == 0) & ~is_worker
-        new_addr = pick_addr(jnp.arange(n), s["opc"], cyc)
+        new_addr = step_addr(jnp.arange(n), s["opc"], pc)
         addr = jnp.where(start, new_addr, s["addr"])
         st = jnp.where(start, REQ, st)
         phase = jnp.where(start, P_ACQ, s["phase"])
@@ -177,16 +209,29 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         phase = jnp.where(md, P_REL, phase)
         tmr = jnp.where(md, rp.lat, tmr)
 
-        # ---- RESP arrives ----
+        # ---- RESP arrives: the current micro-op retires ----
+        big32 = jnp.iinfo(jnp.int32).max
         ra = (st == RESP) & (tmr == 0)
         done = ra & (s["nxt"] == NXT_WORK_DONE)
-        st = jnp.where(done, WORK, st)
-        tmr = jnp.where(done, rp.work, tmr)
-        ops = s["ops"] + done
+        at_bar = done & (pt["kind"][pc] == K_BARRIER)
+        pc_next = (pc + 1) % L
+        wrap = done & (pc_next == 0)             # program completed one op
+        go_work = done & ~at_bar
+        st = jnp.where(go_work, WORK, st)
+        st = jnp.where(at_bar, BARWAIT, st)
+        pc = jnp.where(done, pc_next, pc)
+        # next step's local work (current step's for non-retiring cores)
+        pre_dur = pt["pre_mult"][pc] * rp.work + pt["pre_add"][pc]
+        tmr = jnp.where(go_work, pre_dur, tmr)
+        ops = s["ops"] + wrap
         opc = s["opc"] + done
+        bar_cnt = s["bar_cnt"] + at_bar
+        addr_ops = s["addr_ops"].at[jnp.where(done, addr, a)].add(
+            1, mode="drop")
         to_mod = ra & (s["nxt"] == NXT_MOD)
+        mod_dur = pt["mod_mult"][pc] * rp.modify + pt["mod_add"][pc]
         st = jnp.where(to_mod, MOD, st)
-        tmr = jnp.where(to_mod, rp.modify, tmr)
+        tmr = jnp.where(to_mod, mod_dur, tmr)
         to_bo = ra & (s["nxt"] == NXT_BACKOFF)
         st = jnp.where(to_bo, BACKOFF, st)
         # lock protocols use the paper's stated FIXED backoff (Fig. 4 /
@@ -197,6 +242,15 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         bo_len = (rp.backoff << jnp.maximum(streak - 1, 0)) + (_hash(
             jnp.arange(n) + cyc) % 32).astype(jnp.int32)
         tmr = jnp.where(to_bo, bo_len, tmr)
+
+        # ---- barrier: last arrival releases every waiter (broadcast) ----
+        bar_msgs = jnp.zeros((), jnp.int32)
+        if int(np.any(np.asarray(prog.kind) == K_BARRIER)):
+            min_bar = jnp.min(jnp.where(is_worker, big32, bar_cnt))
+            rel_bar = (st == BARWAIT) & (bar_cnt <= min_bar)
+            st = jnp.where(rel_bar, WORK, st)
+            tmr = jnp.where(rel_bar, rp.lat + pre_dur, tmr)
+            bar_msgs = rel_bar.sum().astype(jnp.int32)  # one wake msg each
 
         # ---- workers stream loads (Fig. 5) ----
         w_tmr = jnp.maximum(s["w_tmr"] - 1, 0)
@@ -246,11 +300,12 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         is_rel = winner & (phase == P_REL)
         bank_ops = s["bank_ops"] + winner.sum()
         cs = dict(st=st, tmr=tmr, nxt=s["nxt"], polls=s["polls"],
-                  msgs=s["msgs"] + 2 * winner.sum(),      # req + resp
+                  msgs=s["msgs"] + 2 * winner.sum() + bar_msgs,  # req + resp
                   **{k: s["xc"][k] for k in xc_keys})
         ctx = proto_registry.Ctx(p=rp, n=n, a=a, q_cap=q_cap,
                                  is_acq=is_acq, is_rel=is_rel,
-                                 wa=addr, wc=jnp.arange(n))
+                                 wa=addr, wc=jnp.arange(n),
+                                 mod_dur=mod_dur)
         cs, bank = proto.on_access(ctx, cs, dict(s["bank"]))
 
         # ---- wakeups (queue-based protocols) ----
@@ -264,27 +319,37 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         extra = cs["msgs"] - s["msgs"] - 2 * winner.sum()
         resp_load = winner.sum() + w_acc.sum() + extra + wake_load
         sleep_cyc = s["sleep_cyc"] + (st == SLEEP).sum()
+        bar_cyc = s["bar_cyc"] + (st == BARWAIT).sum()
         backoff_cyc = s["backoff_cyc"] + (st == BACKOFF).sum()
-        active_cyc = s["active_cyc"] + ((st != SLEEP) & ~is_worker).sum()
+        active_cyc = s["active_cyc"] + ((st != SLEEP) & (st != BARWAIT)
+                                        & ~is_worker).sum()
 
         out = dict(st=st, tmr=tmr, addr=addr, phase=phase, nxt=cs["nxt"],
+                   pc=pc, bar_cnt=bar_cnt,
                    opc=opc, arr_cyc=arr_cyc, streak=streak, parked=parked,
                    resp_prev=resp_load.astype(jnp.int32),
                    ops=ops, bank=bank,
                    xc={k: cs[k] for k in xc_keys},
-                   msgs=cs["msgs"], polls=cs["polls"],
-                   sleep_cyc=sleep_cyc, active_cyc=active_cyc,
+                   msgs=cs["msgs"], polls=cs["polls"], addr_ops=addr_ops,
+                   sleep_cyc=sleep_cyc, bar_cyc=bar_cyc,
+                   active_cyc=active_cyc,
                    backoff_cyc=backoff_cyc,
                    bank_ops=bank_ops, net_stall=net_stall,
                    w_tmr=w_tmr, w_served=w_served)
-        return out, None
+        # completion trace: which micro-op (pre-advance pc) retired where
+        ev = (jnp.where(done, s["pc"], -1).astype(jnp.int32)
+              if p.record_trace else None)
+        return out, ev
 
-    final, _ = lax.scan(step, state, jnp.arange(p.cycles, dtype=jnp.int32))
+    final, trace = lax.scan(step, state,
+                            jnp.arange(p.cycles, dtype=jnp.int32))
     # flatten protocol state into the result dict (names never collide
     # with engine keys)
     flat = {k: v for k, v in final.items() if k not in ("bank", "xc")}
     flat.update(final["bank"])
     flat.update(final["xc"])
+    if p.record_trace:
+        flat["trace_step"] = trace
     return flat
 
 

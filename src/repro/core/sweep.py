@@ -4,7 +4,8 @@ The benchmark figures each run dozens of ``SimParams`` configurations.
 ``sim.run`` jits per *static* parameter set, so a sweep over
 ``(seed, n_addrs, lat, work, ...)`` used to pay one full XLA compile per
 point.  This runner groups configurations by their static fingerprint
-(protocol, core count, cycle count, queue capacity, group count), lifts
+(protocol, workload program, core count, cycle count, queue capacity,
+group count, trace flag), lifts
 every other scalar into a traced axis (``sim.DYN_FIELDS``), and runs each
 group through a single ``jax.vmap``-ed compilation of the engine.
 
@@ -30,8 +31,11 @@ import numpy as np
 
 from repro.core.sim import (DYN_FIELDS, SimParams, derive_metrics, simulate)
 
-#: fields that must match for configs to share one compilation
-STATIC_FIELDS = ("protocol", "n_cores", "cycles", "q_slots", "n_groups")
+#: fields that must match for configs to share one compilation — the
+#: workload's compiled program and the trace shape are baked into the
+#: scan body, so both are part of the fingerprint
+STATIC_FIELDS = ("protocol", "workload", "n_cores", "cycles", "q_slots",
+                 "n_groups", "record_trace")
 
 
 def _static_key(p: SimParams):

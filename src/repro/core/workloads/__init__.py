@@ -1,0 +1,32 @@
+"""Concurrent-algorithm workload plugins for the cycle-level engine.
+
+Importing this package registers every built-in workload:
+
+================  =====================================================
+``rmw_loop``      the seed engine's work→RMW loop (bit-identical)
+``ms_queue``      enqueue/dequeue as two linked atomics on head/tail
+``treiber_stack`` push/pop CAS pairs on one top-of-stack word
+``zipf_histogram`` histogram updates over a Zipf-skewed address stream
+``barrier_phases`` compute → barrier → compute (arXiv:2307.10248)
+================  =====================================================
+
+Workloads are orthogonal to protocols: every registered protocol runs
+every registered workload through the same engine, so the benchmark
+grid (``benchmarks/bench_workloads.py``) is the cartesian product.
+
+New workloads: subclass :class:`~repro.core.workloads.base.Workload`,
+decorate with :func:`~repro.core.workloads.registry.register`, and
+import the module here.
+"""
+from repro.core.workloads import (barrier_phases, ms_queue, rmw_loop,
+                                  treiber_stack, zipf_histogram)
+from repro.core.workloads.base import (ADDR_FIXED, ADDR_UNIFORM, ADDR_ZIPF,
+                                       K_ATOMIC, K_BARRIER, Program,
+                                       Workload, zipf_index)
+from repro.core.workloads.registry import get, names, register
+
+__all__ = ["ADDR_FIXED", "ADDR_UNIFORM", "ADDR_ZIPF", "K_ATOMIC",
+           "K_BARRIER", "Program", "Workload", "zipf_index",
+           "get", "names", "register",
+           "barrier_phases", "ms_queue", "rmw_loop", "treiber_stack",
+           "zipf_histogram"]

@@ -1,0 +1,168 @@
+"""Workload plugin interface for the cycle-level engine (``core.sim``).
+
+A *workload* is the algorithm analogue of a synchronization protocol
+plugin: where a :class:`~repro.core.protocols.base.Protocol` owns what
+happens when a request reaches its bank, a :class:`Workload` owns what
+each core *runs* — a small per-core **program** of micro-ops that the
+engine interprets with a per-core program counter instead of its former
+fixed work→RMW loop.
+
+Program model
+-------------
+A :class:`Program` is a static table of ``length`` micro-op steps.  Each
+step is an atomic phase::
+
+    <pre_mult*work + pre_add cycles of local work>
+    ATOMIC(addr_mode, addr_arg)          # kind = K_ATOMIC
+        with mod_mult*modify + mod_add cycles between load and store
+  or
+    BARRIER-arrival atomic, then wait    # kind = K_BARRIER
+
+Durations are expressed as ``(mult, add)`` pairs against the engine's
+``work``/``modify`` scalars so programs stay valid when those scalars
+are *traced* sweep axes (``core.sweep``).  Address streams:
+
+=============  =========================================================
+ADDR_UNIFORM   counter-hash uniform over ``n_addrs`` (the seed engine's
+               stream — bit-identical to the pre-workload engine)
+ADDR_FIXED     ``addr_arg % n_addrs`` (queue head/tail, stack top,
+               barrier counter)
+ADDR_ZIPF      bounded power-law (Zipf-like) over ``n_addrs`` with
+               skew ``zipf_skew/100`` (:func:`zipf_index`)
+=============  =========================================================
+
+A ``K_BARRIER`` step issues its arrival atomic through the active
+protocol (so arrival cost and retry behaviour are protocol-specific),
+then parks the core in ``BARWAIT`` until every participating core has
+arrived; the engine then releases all waiters with one broadcast
+message each and one response latency.
+
+Completing the last step wraps the program counter and counts one
+completed *op* (so ``rmw_loop``'s single-step program keeps today's
+``ops`` semantics exactly).
+
+Workloads are pure *compilers* — they emit the table host-side; the
+engine's scan body stays the single interpreter.  ``check`` gives each
+workload a host-side validator for its defining conservation laws
+(queue pops ⊆ pushes, stack per-core LIFO, histogram mass balance, ...)
+run by ``tests/test_workloads.py`` over every registered protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# micro-op kinds
+K_ATOMIC, K_BARRIER = 0, 1
+# address-stream modes
+ADDR_UNIFORM, ADDR_FIXED, ADDR_ZIPF = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """Static per-core micro-op table (tuples of ints, one entry per
+    step).  Hashable, so it can live inside the jitted engine's static
+    configuration."""
+    kind: Tuple[int, ...]
+    pre_mult: Tuple[int, ...]       # local work = pre_mult*work + pre_add
+    pre_add: Tuple[int, ...]
+    addr_mode: Tuple[int, ...]
+    addr_arg: Tuple[int, ...]
+    mod_mult: Tuple[int, ...]       # modify  = mod_mult*modify + mod_add
+    mod_add: Tuple[int, ...]
+
+    def __post_init__(self):
+        L = len(self.kind)
+        if L < 1:
+            raise ValueError("empty program")
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if len(v) != L:
+                raise ValueError(f"field {f.name} has length {len(v)} != {L}")
+        for k, m in zip(self.kind, self.addr_mode):
+            if k not in (K_ATOMIC, K_BARRIER):
+                raise ValueError(f"unknown micro-op kind {k}")
+            if k == K_BARRIER and m != ADDR_FIXED:
+                raise ValueError("barrier steps need a FIXED address")
+            if m not in (ADDR_UNIFORM, ADDR_FIXED, ADDR_ZIPF):
+                raise ValueError(f"unknown address mode {m}")
+
+    @property
+    def length(self) -> int:
+        return len(self.kind)
+
+    def tables(self) -> Dict[str, jnp.ndarray]:
+        """The table as int32 device constants for the scan body."""
+        return {f.name: jnp.asarray(getattr(self, f.name), jnp.int32)
+                for f in dataclasses.fields(self)}
+
+
+def zipf_index(h24, n_addrs, skew_pct):
+    """Map a 24-bit hash to a Zipf-like address in ``[0, n_addrs)``.
+
+    Inverse CDF of the bounded continuous power law with density
+    ∝ x^(-s) on [1, n+1): ``x = (1 + u*((n+1)^(1-s) - 1))^(1/(1-s))``
+    with the log-uniform limit ``(n+1)^u`` near s = 1; address =
+    ``floor(x) - 1`` so bin k carries the [k+1, k+2) mass.  ``skew_pct``
+    is ``100*s`` (an int, so the skew can ride the int32 vmapped sweep
+    axes); s = 0 is the exact uniform limit, s ≈ 1 classic Zipf, s > 1
+    concentrates mass on address 0.  ``n_addrs`` and ``skew_pct`` may be
+    traced scalars.
+    """
+    u = h24.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    top = jnp.asarray(n_addrs).astype(jnp.float32) + 1.0
+    s = jnp.asarray(skew_pct).astype(jnp.float32) * jnp.float32(0.01)
+    om = 1.0 - s                                  # 1 - s
+    near1 = jnp.abs(om) < 1e-3
+    safe_om = jnp.where(near1, 1.0, om)
+    x_gen = (1.0 + u * (top ** safe_om - 1.0)) ** (1.0 / safe_om)
+    x = jnp.where(near1, top ** u, x_gen)
+    hi = jnp.asarray(n_addrs).astype(jnp.int32) - 1
+    return jnp.clip(jnp.floor(x).astype(jnp.int32) - 1, 0, hi)
+
+
+class Workload:
+    """Base workload plugin.  Subclasses compile a :class:`Program` from
+    the static ``SimParams`` and validate results host-side."""
+
+    name: str = ""
+    #: smallest static ``n_addrs`` (bank allocation) the program needs to
+    #: keep its fixed addresses distinct; the engine rejects smaller
+    #: allocations.  (A *traced* sweep n_addrs below it only folds the
+    #: fixed addresses together, which stays legal.)
+    min_addrs: int = 1
+    #: canonical ``SimParams`` overrides for this workload's scenario
+    #: (hot-word count, link-update modify, skew...).  Benchmarks merge
+    #: these instead of re-stating workload parameters per figure.
+    scenario: Dict[str, int] = {}
+
+    def program(self, p) -> Program:
+        raise NotImplementedError
+
+    # ---- host-side conservation laws ----
+    def check(self, p, res: Dict[str, Any],
+              trace: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Assert this workload's invariants on a result dict from
+        ``sim.run`` (and, if available, a ``record_trace=True`` event
+        trace of shape (cycles, n) holding completed step ids or -1).
+
+        The base law holds for every workload: each completed atomic
+        retired on exactly one address, so the per-address completion
+        histogram carries exactly the total atomic count.
+        """
+        addr_ops = np.asarray(res["addr_ops"])
+        atomics = int(np.asarray(res["opc"]).sum())
+        assert int(addr_ops.sum()) == atomics, \
+            f"address histogram mass {int(addr_ops.sum())} != {atomics}"
+        return {"atomics": atomics, "ops": int(np.asarray(res["ops"]).sum())}
+
+    # ---- trace helpers for subclasses ----
+    @staticmethod
+    def _per_core_steps(trace: np.ndarray):
+        """Yield (core, step-id sequence in completion order)."""
+        for c in range(trace.shape[1]):
+            col = trace[:, c]
+            yield c, col[col >= 0]

@@ -37,7 +37,7 @@ from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.distributed import cache_specs, make_policy, param_specs, shardings_of
 from repro.launch import hlo_analysis as H
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.train import batch_shardings, make_train_step, opt_state_shardings
 from repro.models import build, input_specs
 from repro.models import transformer as TF
@@ -119,7 +119,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         step, args, shardings, donate = build_cell(cfg, shape, mesh, opt_cfg)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step, in_shardings=shardings,
                               donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
@@ -143,9 +143,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                   f"flops/device={out['cost']['flops']:.3e} "
                   f"coll={out['collectives']['total']/2**20:.1f}MiB")
             print("  memory_analysis:", compiled.memory_analysis())
-            ca = compiled.cost_analysis()
             print("  cost_analysis: flops=%.3e bytes=%.3e" % (
-                ca.get("flops", 0), ca.get("bytes accessed", 0)))
+                out["cost"]["flops"], out["cost"]["bytes_accessed"]))
     except Exception as e:  # noqa: BLE001 — record the failure, don't mask it
         out["status"] = "failed"
         out["error"] = f"{type(e).__name__}: {e}"

@@ -75,8 +75,8 @@ def test_elastic_restore_different_topology(tmp_path):
     ck = Checkpointer(str(tmp_path))
     x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
     ck.save(1, {"w": x}, wait=True)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))      # version-proof axis_types shim
     restored = ck.restore(
         1, {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
         sharding_fn=lambda path, t: NamedSharding(mesh, P("data", None)))

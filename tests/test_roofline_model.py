@@ -53,7 +53,10 @@ opt_cfg = optim.AdamWConfig()
 opt = jax.eval_shape(lambda p: optim.init(opt_cfg, p), params)
 step = make_train_step(model, opt_cfg, Policy())
 c = jax.jit(step).lower(params, opt, input_specs(cfg, shape)).compile()
-hlo = c.cost_analysis()["flops"]
+ca = c.cost_analysis()
+if isinstance(ca, (list, tuple)):   # older jax: one dict per device
+    ca = ca[0]
+hlo = ca["flops"]
 analytic = executed_flops(cfg, shape)
 ratio = analytic / hlo
 print(f"analytic={analytic:.3e} hlo={hlo:.3e} ratio={ratio:.2f}")

@@ -1,0 +1,195 @@
+"""Workload subsystem: registry contract, program validation, and the
+cross-product invariant suite — every registered workload × every
+registered protocol must satisfy its conservation laws.
+
+Laws checked per (workload, protocol) pair through ``Workload.check``:
+queue pops ⊆ pushes at every prefix + total pop order (FIFO per-bank),
+stack per-core LIFO alternation, histogram bin totals == completed
+updates, barrier phase-lockstep (per-core span ≤ 1), and — the paper's
+headline — ``polls == 0`` for the polling-free protocols under *every*
+workload, not just the hardcoded RMW loop they were tuned on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import protocols, workloads
+from repro.core.sim import SimParams, run
+from repro.core.sweep import sweep, sweep_grid
+from repro.core.workloads.base import (ADDR_FIXED, ADDR_UNIFORM, K_BARRIER,
+                                       Program, Workload, zipf_index)
+
+POLLING_FREE = {"lrscwait", "colibri", "colibri_hier", "mwait_lock"}
+SMALL = dict(n_cores=16, n_addrs=4, cycles=2500, record_trace=True)
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_contents_and_errors():
+    names = workloads.names()
+    for wl in ("rmw_loop", "ms_queue", "treiber_stack", "zipf_histogram",
+               "barrier_phases"):
+        assert wl in names
+    with pytest.raises(KeyError):
+        workloads.get("no_such_workload")
+    with pytest.raises(ValueError):              # duplicate name rejected
+        @workloads.register
+        class Dup(Workload):
+            name = "rmw_loop"
+    with pytest.raises(ValueError):              # anonymous plugin rejected
+        workloads.register(Workload)
+
+
+def test_program_validation():
+    ok = dict(kind=(0,), pre_mult=(1,), pre_add=(0,), addr_mode=(0,),
+              addr_arg=(0,), mod_mult=(1,), mod_add=(0,))
+    Program(**ok)
+    with pytest.raises(ValueError):              # ragged table
+        Program(**{**ok, "pre_mult": (1, 2)})
+    with pytest.raises(ValueError):              # empty program
+        Program(kind=(), pre_mult=(), pre_add=(), addr_mode=(),
+                addr_arg=(), mod_mult=(), mod_add=())
+    with pytest.raises(ValueError):              # barrier needs FIXED addr
+        Program(**{**ok, "kind": (K_BARRIER,), "addr_mode": (ADDR_UNIFORM,)})
+    with pytest.raises(ValueError):              # unknown address mode
+        Program(**{**ok, "addr_mode": (9,)})
+
+
+def test_unknown_workload_raises():
+    with pytest.raises(KeyError):
+        run(SimParams(workload="no_such_workload", n_cores=8, cycles=100))
+
+
+def test_min_addrs_enforced():
+    """ms_queue needs head and tail in distinct banks (static alloc)."""
+    with pytest.raises(ValueError):
+        run(SimParams(workload="ms_queue", n_addrs=1, n_cores=8, cycles=100))
+
+
+# ------------------------------------------------- cross-product invariants
+
+@pytest.mark.parametrize("wl", workloads.names())
+@pytest.mark.parametrize("proto", protocols.names())
+def test_invariants_every_workload_every_protocol(wl, proto):
+    p = SimParams(protocol=proto, workload=wl, **SMALL)
+    r = run(p)
+    assert int(r["ops"].sum()) > 0, "no progress"
+    info = workloads.get(wl).check(p, r, r.get("trace_step"))
+    assert info["atomics"] >= info["ops"]
+    if proto in POLLING_FREE:
+        assert int(r["polls"]) == 0, \
+            f"{proto} polled under {wl}: {int(r['polls'])}"
+
+
+# ------------------------------------------------------------ zipf stream
+
+def test_zipf_index_bounds_and_uniform_limit():
+    import jax.numpy as jnp
+    h = jnp.arange(0, 1 << 24, 40961, dtype=jnp.uint32)
+    for n in (1, 2, 37, 1024):
+        for skew in (0, 100, 250):
+            idx = np.asarray(zipf_index(h, n, skew))
+            assert idx.min() >= 0 and idx.max() < n, (n, skew)
+    # s=0 is uniform: every bin within 25% of the expected count
+    counts = np.bincount(np.asarray(zipf_index(h, 8, 0)), minlength=8)
+    assert counts.min() > 0.75 * h.size / 8
+
+
+def test_zipf_hypothesis_properties():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    import jax.numpy as jnp
+
+    @settings(max_examples=30, deadline=None)
+    @given(h=st.integers(0, (1 << 24) - 1), n=st.integers(1, 4096),
+           skew=st.integers(0, 300))
+    def prop(h, n, skew):
+        i = int(zipf_index(jnp.uint32(h), n, skew))
+        assert 0 <= i < n
+        # monotone in the hash: larger u never maps to a smaller address
+        i2 = int(zipf_index(jnp.uint32(min(h + 4096, (1 << 24) - 1)),
+                            n, skew))
+        assert i2 >= i
+
+    prop()
+
+
+def test_zipf_skew_concentrates():
+    """Higher skew → more mass on the hot bin; s=0 matches uniform share."""
+    shares = {}
+    for skew in (0, 100, 200):
+        p = SimParams(protocol="amo", workload="zipf_histogram", n_cores=32,
+                      n_addrs=16, cycles=4000, zipf_skew=skew)
+        r = run(p)
+        hist = np.asarray(r["addr_ops"])[:16]
+        shares[skew] = hist.max() / max(hist.sum(), 1)
+    assert shares[0] < 0.2                       # ≈ 1/16 uniform
+    assert shares[0] < shares[100] < shares[200]
+    assert shares[200] > 0.5
+
+
+# --------------------------------------------------------------- barrier
+
+def test_barrier_lockstep_and_polling_free():
+    """Colibri barrier: arrivals never poll, waiters park in BARWAIT, and
+    no core runs ahead; LRSC pays retry storms on the arrival counter."""
+    kw = dict(workload="barrier_phases", n_cores=64, n_addrs=1, cycles=6000)
+    col = run(SimParams(protocol="colibri", **kw))
+    assert int(col["polls"]) == 0
+    assert int(col["bar_cyc"]) > 0
+    ops = np.asarray(col["ops"])
+    assert int(ops.max()) - int(ops.min()) <= 1
+    lrsc = run(SimParams(protocol="lrsc", **kw))
+    assert int(lrsc["polls"]) > 0
+    assert col["throughput"] > lrsc["throughput"]
+
+
+# ------------------------------------------------------- queue semantics
+
+def test_ms_queue_beats_parameter_approximation_structure():
+    """The two-linked-atomic program really issues 2 atomics per op and
+    splits them across head/tail banks."""
+    p = SimParams(protocol="colibri", workload="ms_queue", n_cores=32,
+                  n_addrs=2, cycles=3000, record_trace=True)
+    r = run(p)
+    info = workloads.get("ms_queue").check(p, r, r["trace_step"])
+    assert info["atomics"] == info["pushes"] + info["pops"]
+    assert abs(info["pushes"] - info["pops"]) <= p.n_cores
+    hist = np.asarray(r["addr_ops"])[:2]
+    assert hist[0] > 0 and hist[1] > 0           # both banks active
+
+
+# ----------------------------------------------------------------- sweep
+
+def test_sweep_matches_run_across_workloads():
+    """Mixed-workload config lists group by the workload-aware static
+    fingerprint and stay bit-identical to sequential run()."""
+    configs = [
+        SimParams(protocol="colibri", workload=wl, n_cores=16, n_addrs=4,
+                  cycles=700)
+        for wl in ("rmw_loop", "ms_queue", "zipf_histogram",
+                   "barrier_phases")
+    ] + [
+        SimParams(protocol="lrsc", workload="treiber_stack", n_cores=16,
+                  n_addrs=4, cycles=700, seed=3),
+    ]
+    for cfg, swept in zip(configs, sweep(configs)):
+        ref = run(cfg)
+        for k in ("ops", "msgs", "polls", "addr_ops", "bar_cnt",
+                  "sleep_cyc", "bar_cyc", "throughput"):
+            assert np.array_equal(np.asarray(swept[k]), np.asarray(ref[k])), \
+                (cfg.workload, k)
+
+
+def test_sweep_grid_zipf_skew_axis():
+    """zipf_skew is a traced sweep axis: one compile covers the ladder."""
+    res = sweep_grid(SimParams(protocol="amo", workload="zipf_histogram",
+                               n_cores=16, n_addrs=8, cycles=1000),
+                     zipf_skew=(0, 150))
+    assert len(res) == 2
+    flat, skewed = (np.asarray(r["addr_ops"])[:8] for r in res)
+    assert flat.max() / max(flat.sum(), 1) < \
+        skewed.max() / max(skewed.sum(), 1)
+    for r in res:
+        ref = run(r["_config"])
+        assert np.array_equal(np.asarray(r["addr_ops"]),
+                              np.asarray(ref["addr_ops"]))
