@@ -1,0 +1,126 @@
+"""Engine hot-path throughput: simulated core-cycles/second and sweep
+points/second, tracked against the pre-overhaul baseline.
+
+Three measurements, all warm (compile excluded — the persistent
+compilation cache makes repeated benchmark runs skip compiles anyway):
+
+* **engine** — one ``sim.run`` at 64 / 256 / 1024 cores, 20k cycles,
+  reported as simulated core-cycles per wall-second.  The 1024-core row
+  is the run the argsort-arbitration engine made impractical; the
+  headline checks it now completes under the old 256-core wall budget.
+* **unroll ablation** — the 256-core run at ``unroll`` 1 / 4 / 8
+  (EXPERIMENTS.md §Engine-throughput quotes the table).
+* **grid256** — the ``workloads_grid`` sweep (5 workloads × 5 protocols
+  × 2 seeds) at 256 cores through ``core.sweep.sweep``, reported as
+  points per second.  The acceptance bar for the hot-path overhaul is
+  ≥2× against ``PRE_PR`` here.
+
+``PRE_PR`` holds the baseline measured at commit e6a3f48 (per-cycle
+``jnp.argsort`` acceptance, fused int32 FIFO key, no unroll, per-key
+host syncs) on the same 2-vCPU reference box that produced every other
+number in EXPERIMENTS.md; ``reports/benchmarks.engine.json`` preserves
+the ratio so future PRs have a perf trajectory to compare against.
+
+``REPRO_BENCH_QUICK=1`` (the CI smoke row) trims to 64/256 cores,
+2k cycles and a 2-workload grid so the row stays cheap.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+from repro.core.sim import SimParams, run
+from repro.core.sweep import sweep
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+
+ENGINE_CYCLES = 2_000 if QUICK else 20_000
+ENGINE_CORES = (64, 256) if QUICK else (64, 256, 1024)
+UNROLLS = () if QUICK else (2, 4, 8)       # default unroll=1 is the
+GRID_CYCLES = 1_000 if QUICK else 3_000    # engine_256c row itself
+GRID_WORKLOADS = (("rmw_loop", "ms_queue") if QUICK else
+                  ("rmw_loop", "ms_queue", "treiber_stack",
+                   "zipf_histogram", "barrier_phases"))
+GRID_PROTOS = (("colibri", "lrsc") if QUICK else
+               ("colibri", "lrscwait", "mwait_lock", "lrsc", "amo_lock"))
+GRID_SEEDS = (0,) if QUICK else (0, 1)
+
+#: pre-overhaul baseline (commit e6a3f48), measured with this module's
+#: exact protocol on the reference box.  Keys match the row labels.
+PRE_PR = {
+    "engine_64c": 4.235e5,      # simulated core-cycles / s, warm
+    "engine_256c": 5.908e5,
+    "engine_1024c": 9.050e5,
+    "engine_256c_wall_s": 8.67,  # the "old 256-core budget" (20k cycles)
+    "engine_1024c_wall_s": 22.63,
+    "grid256_points_per_s": 0.989,  # 50-point workloads_grid sweep @256c
+}
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()                                        # warm / compile
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _grid_configs() -> List[SimParams]:
+    from benchmarks.bench_workloads import _scenario
+    return [SimParams(protocol=proto, workload=wl, n_cores=256,
+                      cycles=GRID_CYCLES, seed=seed, **_scenario(wl))
+            for wl in GRID_WORKLOADS for proto in GRID_PROTOS
+            for seed in GRID_SEEDS]
+
+
+def rows() -> List[Dict]:
+    out: List[Dict] = []
+    for n in ENGINE_CORES:
+        p = SimParams(protocol="colibri", n_cores=n, cycles=ENGINE_CYCLES)
+        dt = _time(lambda: run(p), reps=1 if n >= 1024 else 3)
+        label = f"engine_{n}c"
+        out.append({"figure": "engine", "row": label, "n_cores": n,
+                    "cycles": ENGINE_CYCLES, "wall_s": dt,
+                    "core_cycles_per_s": n * ENGINE_CYCLES / dt,
+                    "pre_pr_core_cycles_per_s": PRE_PR.get(label)})
+    for u in UNROLLS:
+        p = SimParams(protocol="colibri", n_cores=256, cycles=ENGINE_CYCLES,
+                      unroll=u)
+        dt = _time(lambda: run(p))
+        out.append({"figure": "engine", "row": f"unroll_{u}", "n_cores": 256,
+                    "cycles": ENGINE_CYCLES, "wall_s": dt,
+                    "core_cycles_per_s": 256 * ENGINE_CYCLES / dt})
+    cfgs = _grid_configs()
+    dt = _time(lambda: sweep(cfgs), reps=1)
+    out.append({"figure": "engine", "row": "grid256", "n_points": len(cfgs),
+                "cycles": GRID_CYCLES, "wall_s": dt,
+                "points_per_s": len(cfgs) / dt,
+                "pre_pr_points_per_s": PRE_PR["grid256_points_per_s"]})
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    by = {r["row"]: r for r in rs}
+    head: Dict[str, float] = {}
+    e256 = by.get("engine_256c")
+    if e256:
+        head["engine_256c_Mcyc_per_s"] = e256["core_cycles_per_s"] / 1e6
+        head["engine_256c_speedup_vs_pre_pr"] = (
+            e256["core_cycles_per_s"] / PRE_PR["engine_256c"])
+    e1024 = by.get("engine_1024c")
+    if e1024:
+        head["engine_1024c_Mcyc_per_s"] = e1024["core_cycles_per_s"] / 1e6
+        head["engine_1024c_under_old_256c_budget"] = float(
+            e1024["wall_s"] <= PRE_PR["engine_256c_wall_s"])
+    grid = by["grid256"]
+    head["grid256_points_per_s"] = grid["points_per_s"]
+    if not QUICK:
+        head["grid256_speedup_vs_pre_pr"] = (
+            grid["points_per_s"] / PRE_PR["grid256_points_per_s"])
+    for u in UNROLLS:
+        head[f"unroll{u}_Mcyc_per_s"] = (
+            by[f"unroll_{u}"]["core_cycles_per_s"] / 1e6)
+    return head

@@ -59,6 +59,20 @@ class Ctx:
     is_rel: jnp.ndarray      # (n,) bool — this cycle's release winners
     wa: jnp.ndarray          # (n,) int32 — each core's target bank
     wc: jnp.ndarray          # (n,) int32 — arange(n) core ids
+    ba: jnp.ndarray = None   # (a,) int32 — arange(a) bank ids (hoisted
+    #                          once per trace; handlers reuse it instead
+    #                          of building a fresh iota every cycle)
+    #: (a,) int32 — each bank's winning core this cycle, or ``n`` when
+    #: the bank has no winner.  The engine guarantees at most one winner
+    #: per bank, so protocols can update bank-side state *densely* —
+    #: ``jnp.where(acq_b, f(win_core), state)`` — instead of scattering
+    #: n core lanes into a-sized arrays; that turns every bank-state
+    #: write from an n-lane scatter into O(a) vector ops (the dominant
+    #: cost of queue protocols on CPU).  Gathering core-side values at
+    #: ``jnp.minimum(win_core, n - 1)`` is safe; mask with acq_b/rel_b.
+    win_core: jnp.ndarray = None
+    acq_b: jnp.ndarray = None   # (a,) bool — bank winner is an acquire
+    rel_b: jnp.ndarray = None   # (a,) bool — bank winner is a release
     #: (n,) int32 — each core's *current micro-op* modify duration.  The
     #: engine interprets workload programs (``core.workloads``), so the
     #: cycles between load and store are a per-step property, not the
@@ -103,7 +117,8 @@ class Protocol:
         wake_tmr = bank["wake_tmr"]
         fire = wake_tmr == 1
         wake_tmr = jnp.maximum(wake_tmr - 1, 0)
-        head_core = bank["qbuf"][jnp.arange(ctx.a), bank["qhead"]]
+        ba = ctx.ba if ctx.ba is not None else jnp.arange(ctx.a)
+        head_core = bank["qbuf"][ba, bank["qhead"]]
         # wake the head core of each firing queue
         fire_core = jnp.where(fire & (bank["qlen"] > 0), head_core, ctx.n)
         woken = jnp.zeros((ctx.n,), bool).at[fire_core].set(True, mode="drop")

@@ -24,7 +24,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (MOD, NXT_MOD, NXT_WORK_DONE, RESP,
-                                       SLEEP, Protocol, mset)
+                                       SLEEP, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -59,8 +59,9 @@ class ColibriHier(Protocol):
         )
 
     def on_access(self, ctx, cs, bank):
-        p, wa, wc = ctx.p, ctx.wa, ctx.wc
+        p, wa = ctx.p, ctx.wa
         is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        acq_b, rel_b, win, ba = ctx.acq_b, ctx.rel_b, ctx.win_core, ctx.ba
         G, gsz, cap_l = self._geom(p, ctx.n)
         lqbuf, lqhead, lqlen = bank["lqbuf"], bank["lqhead"], bank["lqlen"]
         ggq, gqhead, gqlen = bank["ggq"], bank["gqhead"], bank["gqlen"]
@@ -68,70 +69,79 @@ class ColibriHier(Protocol):
         turn_srv = bank["turn_srv"]
         wake_tmr, wake_q = bank["wake_tmr"], bank["wake_q"]
 
-        g = jnp.minimum(wc // gsz, G - 1)        # each core's group
-        lq = wa * G + g                          # flat (addr, group) queue id
-        oob_a = jnp.full_like(wa, ctx.a)
-        oob_lq = jnp.full_like(lq, ctx.a * G)
+        # bank-side: the winning core's group and flat queue id.
+        # All bank/queue state writes below are dense over banks (or
+        # a-lane scatters into the (a*G,) local-queue arrays): the
+        # engine guarantees ≤1 winner per bank, each either an acquire
+        # or a release, so no two writes ever hit the same bank's state
+        # and the former n-lane masked scatters collapse to vector ops.
+        g_b = jnp.minimum(jnp.minimum(win, ctx.n - 1) // gsz, G - 1)
+        lq_b = ba * G + g_b                      # flat (addr, group) id
+        oob_a, oob_lq = ctx.a, ctx.a * G
 
         # ---- acquire ----
-        idle = cur_grp[wa] < 0                   # no turn in progress
+        idle_b = cur_grp < 0                     # no turn in progress
+        idle = idle_b[wa]
         grant = is_acq & idle
-        cur_grp = mset(cur_grp, wa, grant, g)
-        turn_srv = mset(turn_srv, wa, grant, 0)
+        grant_b = acq_b & idle_b
+        cur_grp = jnp.where(grant_b, g_b, cur_grp)
+        turn_srv = jnp.where(grant_b, 0, turn_srv)
         cs["st"] = jnp.where(grant, RESP, cs["st"])
         cs["tmr"] = jnp.where(grant, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(grant, NXT_MOD, cs["nxt"])
         # enqueue in the group-local queue and sleep (never full: cap_l
         # covers one outstanding RMW per member core — polling-free)
         enq = is_acq & ~idle
-        slot = (lqhead[lq] + lqlen[lq]) % cap_l
-        lqbuf = lqbuf.at[jnp.where(enq, lq, oob_lq), slot].set(wc, mode="drop")
-        lqlen = lqlen.at[lq].add(jnp.where(enq, 1, 0), mode="drop")
+        enq_b = acq_b & ~idle_b
+        slot_b = (lqhead[lq_b] + lqlen[lq_b]) % cap_l
+        put_lq = jnp.where(enq_b, lq_b, oob_lq)
+        lqbuf = lqbuf.at[put_lq, slot_b].set(win, mode="drop")
+        lqlen = lqlen.at[put_lq].add(1, mode="drop")
         cs["st"] = jnp.where(enq, SLEEP, cs["st"])
-        cs["msgs"] = cs["msgs"] + enq.sum()      # intra-cluster SuccUpdate
+        cs["msgs"] = cs["msgs"] + enq_b.sum()    # intra-cluster SuccUpdate
         # first waiter of a non-serving group registers it globally
-        reg = enq & (cur_grp[wa] != g) & ~g_inq[wa, g]
-        gslot = (gqhead[wa] + gqlen[wa]) % G
-        ggq = ggq.at[jnp.where(reg, wa, oob_a), gslot].set(g, mode="drop")
-        gqlen = gqlen.at[wa].add(jnp.where(reg, 1, 0), mode="drop")
-        g_inq = g_inq.at[jnp.where(reg, wa, oob_a), g].set(True, mode="drop")
-        cs["msgs"] = cs["msgs"] + 2 * reg.sum()  # global registration RT
+        reg_b = enq_b & (cur_grp != g_b) & ~g_inq[ba, g_b]
+        gslot_b = (gqhead + gqlen) % G
+        reg_a = jnp.where(reg_b, ba, oob_a)
+        ggq = ggq.at[reg_a, gslot_b].set(g_b, mode="drop")
+        gqlen = gqlen + reg_b
+        g_inq = g_inq.at[reg_a, g_b].set(True, mode="drop")
+        cs["msgs"] = cs["msgs"] + 2 * reg_b.sum()  # global registration RT
 
         # ---- release (releaser's group always == cur_grp[wa]) ----
-        srv = turn_srv[wa] + 1                   # ops completed this turn
+        srv_b = turn_srv + 1                     # ops completed this turn
         # turn budget: with competitors registered, a group yields after
         # group_size ops even if its local queue still holds waiters —
         # round-robin fairness at cluster granularity
-        exhausted = is_rel & (srv >= gsz) & (gqlen[wa] > 0)
-        more_local = is_rel & (lqlen[lq] > 0) & ~exhausted
-        wake_q = mset(wake_q, wa, more_local, lq)
-        wake_tmr = mset(wake_tmr, wa, more_local, self.local_delay)
-        cs["msgs"] = cs["msgs"] + more_local.sum()   # intra-cluster wake
-        turn_srv = mset(turn_srv, wa, more_local, srv)
+        exhausted_b = rel_b & (srv_b >= gsz) & (gqlen > 0)
+        more_local_b = rel_b & (lqlen[lq_b] > 0) & ~exhausted_b
+        wake_q = jnp.where(more_local_b, lq_b, wake_q)
+        wake_tmr = jnp.where(more_local_b, self.local_delay, wake_tmr)
+        cs["msgs"] = cs["msgs"] + more_local_b.sum()  # intra-cluster wake
+        turn_srv = jnp.where(more_local_b, srv_b, turn_srv)
         # yielding with waiters left: re-register at the global tail
-        re_reg = is_rel & (lqlen[lq] > 0) & exhausted
-        tail = (gqhead[wa] + gqlen[wa]) % G
-        ggq = ggq.at[jnp.where(re_reg, wa, oob_a), tail].set(g, mode="drop")
-        gqlen = gqlen.at[wa].add(jnp.where(re_reg, 1, 0), mode="drop")
-        g_inq = g_inq.at[jnp.where(re_reg, wa, oob_a), g].set(
-            True, mode="drop")
-        cs["msgs"] = cs["msgs"] + 2 * re_reg.sum()   # re-registration RT
+        re_reg_b = rel_b & (lqlen[lq_b] > 0) & exhausted_b
+        tail_b = (gqhead + gqlen) % G
+        re_reg_a = jnp.where(re_reg_b, ba, oob_a)
+        ggq = ggq.at[re_reg_a, tail_b].set(g_b, mode="drop")
+        gqlen = gqlen + re_reg_b
+        g_inq = g_inq.at[re_reg_a, g_b].set(True, mode="drop")
+        cs["msgs"] = cs["msgs"] + 2 * re_reg_b.sum()  # re-registration RT
         # turn over: local queue drained, or budget spent with competitors
-        end_turn = is_rel & ((lqlen[lq] == 0) | exhausted)
-        have_next = end_turn & (gqlen[wa] > 0)
-        next_g = ggq[wa, gqhead[wa]]
-        cur_grp = mset(cur_grp, wa, have_next, next_g)
-        g_inq = g_inq.at[jnp.where(have_next, wa, oob_a), next_g].set(
+        end_turn_b = rel_b & ((lqlen[lq_b] == 0) | exhausted_b)
+        have_next_b = end_turn_b & (gqlen > 0)
+        next_g_b = ggq[ba, gqhead]
+        cur_grp = jnp.where(have_next_b, next_g_b, cur_grp)
+        g_inq = g_inq.at[jnp.where(have_next_b, ba, oob_a), next_g_b].set(
             False, mode="drop")
-        gqhead = (gqhead.at[wa].add(jnp.where(have_next, 1, 0), mode="drop")
-                  % G)
-        gqlen = gqlen.at[wa].add(jnp.where(have_next, -1, 0), mode="drop")
-        wake_q = mset(wake_q, wa, have_next, wa * G + next_g)
-        wake_tmr = mset(wake_tmr, wa, have_next, p.lat + 2)
-        turn_srv = mset(turn_srv, wa, have_next, 0)
-        cs["msgs"] = cs["msgs"] + 2 * have_next.sum()  # cross-cluster wake RT
+        gqhead = jnp.where(have_next_b, (gqhead + 1) % G, gqhead)
+        gqlen = gqlen - have_next_b
+        wake_q = jnp.where(have_next_b, ba * G + next_g_b, wake_q)
+        wake_tmr = jnp.where(have_next_b, p.lat + 2, wake_tmr)
+        turn_srv = jnp.where(have_next_b, 0, turn_srv)
+        cs["msgs"] = cs["msgs"] + 2 * have_next_b.sum()  # x-cluster wake RT
         # nothing left anywhere: the address goes idle
-        cur_grp = mset(cur_grp, wa, end_turn & ~have_next, -1)
+        cur_grp = jnp.where(end_turn_b & ~have_next_b, -1, cur_grp)
         cs["st"] = jnp.where(is_rel, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])

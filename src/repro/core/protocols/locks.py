@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       RESP, Protocol, mset)
+                                       RESP, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -36,7 +36,6 @@ class SpinLock(Protocol):
         free = ~lock[wa]
         got = is_acq & free
         fail = is_acq & ~free
-        lock = mset(lock, wa, got, True)
         cs["st"] = jnp.where(is_acq, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_acq, acq_rt, cs["tmr"])
         cs["nxt"] = jnp.where(got, NXT_MOD,
@@ -44,12 +43,11 @@ class SpinLock(Protocol):
         cs["polls"] = cs["polls"] + fail.sum()
         if self.lr_pair:
             cs["msgs"] = cs["msgs"] + 2 * is_acq.sum()
-        rel = is_rel
-        lock = mset(lock, wa, rel, False)
-        cs["st"] = jnp.where(rel, RESP, cs["st"])
-        cs["tmr"] = jnp.where(rel, p.lat, cs["tmr"])
-        cs["nxt"] = jnp.where(rel, NXT_WORK_DONE, cs["nxt"])
-        bank["lock"] = lock
+        cs["st"] = jnp.where(is_rel, RESP, cs["st"])
+        cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
+        cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
+        # dense bank update: a winner is either acq or rel, never both
+        bank["lock"] = (lock | (ctx.acq_b & ~lock)) & ~ctx.rel_b
         return cs, bank
 
 
@@ -85,7 +83,9 @@ class TicketLock(Protocol):
         # first attempt draws a ticket; re-polls keep the one they hold
         draw = is_acq & (cs["tkt"] < 0)
         my_tkt = jnp.where(draw, next_tkt[wa], cs["tkt"])
-        next_tkt = next_tkt.at[wa].add(jnp.where(draw, 1, 0), mode="drop")
+        wcs = jnp.minimum(ctx.win_core, ctx.n - 1)   # gather-safe
+        draw_b = ctx.acq_b & (cs["tkt"][wcs] < 0)
+        next_tkt = next_tkt + draw_b                 # dense dispenser bump
         cs["tkt"] = jnp.where(is_acq, my_tkt, cs["tkt"])
         got = is_acq & (my_tkt == serving[wa])
         fail = is_acq & ~got
@@ -95,7 +95,7 @@ class TicketLock(Protocol):
                               jnp.where(fail, NXT_BACKOFF, cs["nxt"]))
         cs["polls"] = cs["polls"] + fail.sum()
         # release: advance the serving counter, drop the ticket
-        serving = serving.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
+        serving = serving + ctx.rel_b                # dense
         cs["tkt"] = jnp.where(is_rel, -1, cs["tkt"])
         cs["st"] = jnp.where(is_rel, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])

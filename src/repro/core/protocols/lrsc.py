@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       RESP, Protocol, mset)
+                                       RESP, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -24,20 +24,24 @@ class Lrsc(Protocol):
         )
 
     def on_access(self, ctx, cs, bank):
-        p, wa, wc = ctx.p, ctx.wa, ctx.wc
+        p, wa = ctx.p, ctx.wa
         is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        acq_b, rel_b, win = ctx.acq_b, ctx.rel_b, ctx.win_core
         resv_core, resv_valid = bank["resv_core"], bank["resv_valid"]
-        free_slot = ~resv_valid[wa]
-        got_resv = is_acq & free_slot
-        resv_core = mset(resv_core, wa, got_resv, wc)
-        resv_valid = mset(resv_valid, wa, got_resv, True)
+        # bank state updates are dense over banks: the engine guarantees
+        # at most one winner per bank, and a bank's winner is either an
+        # acquire or a release, so the acquire- and release-side writes
+        # never touch the same bank this cycle
+        got_resv_b = acq_b & ~resv_valid
+        resv_core = jnp.where(got_resv_b, win, resv_core)
         cs["st"] = jnp.where(is_acq, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_acq, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(is_acq, NXT_MOD, cs["nxt"])
         # SC: succeeds iff holding the reservation; owner's SC releases it
-        owner = is_rel & resv_valid[wa] & (resv_core[wa] == wc)
+        owner_b = rel_b & resv_valid & (resv_core == win)
+        owner = is_rel & owner_b[wa]
         fail = is_rel & ~owner
-        resv_valid = mset(resv_valid, wa, owner, False)
+        resv_valid = (resv_valid | got_resv_b) & ~owner_b
         cs["st"] = jnp.where(is_rel, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(owner, NXT_WORK_DONE,

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       RESP, SLEEP, Protocol, mset)
+                                       RESP, SLEEP, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -37,19 +37,22 @@ class LrscWait(Protocol):
         )
 
     def on_access(self, ctx, cs, bank):
-        p, wa, wc, q_cap = ctx.p, ctx.wa, ctx.wc, ctx.q_cap
+        p, wa, q_cap = ctx.p, ctx.wa, ctx.q_cap
         is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        acq_b, rel_b, win = ctx.acq_b, ctx.rel_b, ctx.win_core
         qbuf, qhead, qlen = bank["qbuf"], bank["qhead"], bank["qlen"]
         empty = qlen[wa] == 0
         full = qlen[wa] >= q_cap
         grant = is_acq & empty
         enq = is_acq & ~empty & ~full
         rej = is_acq & full                  # finite-q immediate fail
-        slot = (qhead[wa] + qlen[wa]) % q_cap
-        put = grant | enq
-        oob = jnp.full_like(wa, ctx.a)
-        qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
-        qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
+        # bank-side queue updates are dense: at most one winner per bank
+        # (either an acquire or a release), so enqueue/dequeue never
+        # race within a cycle and the scatters collapse to vector ops
+        put_b = acq_b & (qlen < q_cap)
+        slot_b = (qhead + qlen) % q_cap
+        qbuf = qbuf.at[jnp.where(put_b, ctx.ba, ctx.a), slot_b].set(
+            win, mode="drop")
         cs["st"] = jnp.where(grant, RESP, jnp.where(enq, SLEEP, cs["st"]))
         cs["tmr"] = jnp.where(grant, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(grant, NXT_MOD, cs["nxt"])
@@ -61,16 +64,15 @@ class LrscWait(Protocol):
         if self.successor_updates:
             cs["msgs"] = cs["msgs"] + 2 * enq.sum()
         # SCwait: always valid (only the head ever gets a response)
-        qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
-                 % q_cap)
-        qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
+        qhead = jnp.where(rel_b, (qhead + 1) % q_cap, qhead)
+        qlen = qlen + put_b - rel_b
         cs["st"] = jnp.where(is_rel, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
-        pend = is_rel & (qlen[wa] > 0)
-        bank["wake_tmr"] = mset(bank["wake_tmr"], wa, pend,
-                                self.wake_delay(p))
+        pend_b = rel_b & (qlen > 0)
+        bank["wake_tmr"] = jnp.where(pend_b, self.wake_delay(p),
+                                     bank["wake_tmr"])
         if self.successor_updates:
-            cs["msgs"] = cs["msgs"] + 2 * pend.sum()  # WakeUpRequest + resp
+            cs["msgs"] = cs["msgs"] + 2 * pend_b.sum()  # WakeUpReq + resp
         bank["qbuf"], bank["qhead"], bank["qlen"] = qbuf, qhead, qlen
         return cs, bank

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_MOD, NXT_WORK_DONE, RESP, SLEEP,
-                                       Protocol, mset)
+                                       Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -29,29 +29,28 @@ class MwaitLock(Protocol):
         )
 
     def on_access(self, ctx, cs, bank):
-        p, wa, wc, q_cap = ctx.p, ctx.wa, ctx.wc, ctx.q_cap
+        p, wa, q_cap = ctx.p, ctx.wa, ctx.q_cap
         is_acq, is_rel = ctx.is_acq, ctx.is_rel
+        acq_b, rel_b, win = ctx.acq_b, ctx.rel_b, ctx.win_core
         qbuf, qhead, qlen = bank["qbuf"], bank["qhead"], bank["qlen"]
         empty = qlen[wa] == 0
         grant = is_acq & empty
         enq = is_acq & ~empty
-        slot = (qhead[wa] + qlen[wa]) % q_cap
-        put = grant | enq
-        oob = jnp.full_like(wa, ctx.a)
-        qbuf = qbuf.at[jnp.where(put, wa, oob), slot].set(wc, mode="drop")
-        qlen = qlen.at[wa].add(jnp.where(put, 1, 0), mode="drop")
+        # dense bank-side queue updates (≤1 winner per bank — see base)
+        slot_b = (qhead + qlen) % q_cap
+        qbuf = qbuf.at[jnp.where(acq_b, ctx.ba, ctx.a), slot_b].set(
+            win, mode="drop")
         cs["st"] = jnp.where(grant, RESP, jnp.where(enq, SLEEP, cs["st"]))
         cs["tmr"] = jnp.where(grant, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(grant, NXT_MOD, cs["nxt"])
         cs["msgs"] = cs["msgs"] + 2 * enq.sum()          # Mwait setup
-        qhead = (qhead.at[wa].add(jnp.where(is_rel, 1, 0), mode="drop")
-                 % q_cap)
-        qlen = qlen.at[wa].add(jnp.where(is_rel, -1, 0), mode="drop")
+        qhead = jnp.where(rel_b, (qhead + 1) % q_cap, qhead)
+        qlen = qlen + acq_b - rel_b
         cs["st"] = jnp.where(is_rel, RESP, cs["st"])
         cs["tmr"] = jnp.where(is_rel, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
-        pend = is_rel & (qlen[wa] > 0)
+        pend_b = rel_b & (qlen > 0)
         # releaser wakes the successor: one response latency + Qnode bounce
-        bank["wake_tmr"] = mset(bank["wake_tmr"], wa, pend, p.lat + 2)
+        bank["wake_tmr"] = jnp.where(pend_b, p.lat + 2, bank["wake_tmr"])
         bank["qbuf"], bank["qhead"], bank["qlen"] = qbuf, qhead, qlen
         return cs, bank

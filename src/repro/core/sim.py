@@ -66,12 +66,36 @@ DYN_FIELDS = ("seed", "n_addrs", "lat", "work", "modify", "backoff",
               "backoff_exp", "net_bw", "hol_block", "n_workers",
               "zipf_skew")
 
+#: int32 sentinel for "no request" in the arbitration primitives
+_BIG = jnp.iinfo(jnp.int32).max
+
+#: element ceiling for the dense (a, n) arbitration/histogram path: with
+#: a small bank×core product a masked 2-D min/sum vectorizes, while an
+#: n-lane scatter serializes lane by lane on CPU (~10× the cost of a
+#: dense element); past this the scatter's O(n) beats the dense O(a*n).
+#: Measured crossover on the 2-vCPU reference box: a=64 @ n=256 still
+#: wins dense (1.26×), a=256 @ n=256 loses (0.7×).
+_DENSE_BANK_ELTS = 32768
+
+#: under the vmapped sweep the dense intermediate is (batch, a, n) —
+#: once that working set spills L2 the dense path collapses (measured
+#: 0.15× at 393k elements), so ``simulate`` takes the batch size as a
+#: static hint and also bounds the batched element count.
+_DENSE_BATCH_ELTS = 131072
+
 
 @dataclasses.dataclass(frozen=True)
 class SimParams:
     protocol: str = "colibri"
     workload: str = "rmw_loop"       # per-core program (core.workloads)
     n_cores: int = 256
+    # lax.scan unroll factor: XLA fuses this many simulated cycles per
+    # loop iteration.  Pure compilation knob — results are bit-identical
+    # at every setting (tests/test_protocols.py re-runs the goldens at
+    # unroll 2 and 8 on top of the default).  With the scatter-free hot
+    # path, 1 measures fastest up to 256 cores and ~2 at 1024
+    # (EXPERIMENTS.md §Engine-throughput has the ablation).
+    unroll: int = 1
     n_addrs: int = 1                 # contention: fewer addresses = hotter
     cycles: int = 20_000
     lat: int = 5                     # one-way network latency (cycles)
@@ -101,6 +125,65 @@ def _hash(x):
     return (x.astype(jnp.uint32) * jnp.uint32(2654435761)) >> 8
 
 
+def accept_rotating_fair(all_req: jnp.ndarray, rot: jnp.ndarray,
+                         budget, shift=None) -> jnp.ndarray:
+    """Accept the ``budget`` requesters with the lowest rotated priority.
+
+    O(n) replacement for the former per-cycle ``jnp.argsort`` ranking:
+    ``rot`` is a permutation of ``[0, n)``, so laying the request mask
+    out in rot-space and taking a cumulative sum yields each requester's
+    exact rank among requesters (the stable argsort put all requesters
+    first, ordered by ``rot``, which is the same ordering).
+
+    For an arbitrary permutation the transpose into rot-space is a
+    scatter and the rank read-back a gather.  The engine's rotation is
+    *affine* — ``rot = (iota + shift) % n`` — so when ``shift`` is
+    passed both turn into plain array rotations (``jnp.roll``), leaving
+    the hot path scatter- and gather-free: roll, cumsum, roll back.
+    The winner set is bit-identical either way —
+    ``tests/test_arbitration.py`` proves both against the argsort path.
+    """
+    if shift is None:
+        n = all_req.shape[0]
+        req_by_rot = jnp.zeros((n,), jnp.int32).at[rot].set(
+            all_req.astype(jnp.int32))
+        rank = jnp.cumsum(req_by_rot)[rot] - 1   # rank among requesters
+    else:
+        req_by_rot = jnp.roll(all_req.astype(jnp.int32), shift)
+        rank = jnp.roll(jnp.cumsum(req_by_rot), -shift) - 1
+    return all_req & (rank < budget)
+
+
+def _fifo_lex_best(arrived, arr_cyc, rot, addr, a: int):
+    """Lexicographic (arrival stamp, rotated priority) segment-min.
+    Returns ``(winner_mask (n,), best_rot (a,), valid (a,))`` — overflow
+    -safe at any stamp magnitude (two chained int32 mins, no product)."""
+    best_cyc = jnp.full((a,), _BIG, jnp.int32).at[addr].min(
+        jnp.where(arrived, arr_cyc, _BIG))
+    tie = arrived & (arr_cyc == best_cyc[addr])
+    best_rot = jnp.full((a,), _BIG, jnp.int32).at[addr].min(
+        jnp.where(tie, rot, _BIG))
+    return tie & (rot == best_rot[addr]), best_rot, best_cyc != _BIG
+
+
+def fifo_bank_winners(arrived: jnp.ndarray, arr_cyc: jnp.ndarray,
+                      rot: jnp.ndarray, addr: jnp.ndarray,
+                      a: int) -> jnp.ndarray:
+    """Per-bank FIFO arbitration: the oldest arrival stamp wins its bank;
+    rotating priority breaks same-cycle ties.
+
+    Two chained segment-mins replace the former fused
+    ``arr_cyc * (n + 1) + rot`` key, which silently overflowed int32 at
+    ``n_cores=1024`` once ``arr_cyc`` passed ~2M cycles (the product
+    exceeds 2^31), inverting the FIFO order.  Comparing stamps directly
+    keeps the full int32 cycle horizon at any core count and is
+    bit-identical to the key on every non-overflowing input.  (The
+    engine statically picks the one-min fused key whenever
+    ``cycles * (n + 1)`` provably fits int32, and this path otherwise.)
+    """
+    return _fifo_lex_best(arrived, arr_cyc, rot, addr, a)[0]
+
+
 def _resolve(p: SimParams, dyn: Optional[Dict] = None) -> SimpleNamespace:
     """Parameter namespace handed to the engine and plugins.  Fields named
     in ``dyn`` become traced scalars; everything else stays a Python int
@@ -116,12 +199,15 @@ def _resolve(p: SimParams, dyn: Optional[Dict] = None) -> SimpleNamespace:
     return SimpleNamespace(**vals)
 
 
-def simulate(p: SimParams, dyn: Optional[Dict] = None
+def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
              ) -> Dict[str, jnp.ndarray]:
     """One engine run.  ``p`` is static (shapes, protocol, cycle count);
     ``dyn`` optionally overrides ``DYN_FIELDS`` entries with traced
     scalars — ``p.n_addrs`` then acts as the static bank allocation upper
-    bound while ``dyn["n_addrs"]`` is the live address count."""
+    bound while ``dyn["n_addrs"]`` is the live address count.  ``batch``
+    is a static hint from the vmapped sweep runner: how many engine
+    instances share this trace (sizes the dense-vs-scatter arbitration
+    choice; never changes results)."""
     proto = proto_registry.get(p.protocol)
     wl = wl_registry.get(p.workload)
     if p.n_addrs < wl.min_addrs:
@@ -166,21 +252,43 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         w_served=jnp.zeros((n,), jnp.int32),
     )
     xc_keys = tuple(state["xc"])
-    is_worker = jnp.arange(n) < rp.n_workers     # first W cores are workers
 
-    def step_addr(core, opc, pc):
+    # ---- closure constants hoisted out of the scan body ----------------
+    # Everything here is computed ONCE per trace instead of once per
+    # simulated cycle: the core-id iota, the worker mask, the per-step
+    # duration/kind tables (micro-op table entries combined with the
+    # possibly-traced ``work``/``modify`` scalars), and the fixed-address
+    # table.  The scan body only gathers from them at ``pc``.
+    iota = jnp.arange(n, dtype=jnp.int32)
+    ba = jnp.arange(a, dtype=jnp.int32)
+    is_worker = iota < rp.n_workers              # first W cores are workers
+    na = rp.n_addrs
+    if not isinstance(na, int):
+        na = na.astype(jnp.uint32)
+    pre_dur_tab = pt["pre_mult"] * rp.work + pt["pre_add"]      # (L,)
+    mod_dur_tab = pt["mod_mult"] * rp.modify + pt["mod_add"]    # (L,)
+    kind_is_bar = pt["kind"] == K_BARRIER                       # (L,)
+    mode_is_fix = pt["addr_mode"] == ADDR_FIXED                 # (L,)
+    mode_is_zipf = pt["addr_mode"] == ADDR_ZIPF                 # (L,)
+    fix_tab = (pt["addr_arg"].astype(jnp.uint32) % na).astype(jnp.int32)
+    has_zipf = bool(np.any(np.asarray(prog.addr_mode) == ADDR_ZIPF))
+    has_bar = bool(np.any(np.asarray(prog.kind) == K_BARRIER))
+    # static: can the fused FIFO key arr_cyc*(n+1)+rot ever leave int32?
+    # (arr_cyc < cycles, rot <= n).  The seed engine assumed it never
+    # did — false at n=1024 past ~2M cycles — so the safe two-stage
+    # arbiter kicks in exactly where the old key wrapped.
+    key_fits_int32 = p.cycles * (n + 1) + n <= _BIG
+    dense_banks = (a * n <= _DENSE_BANK_ELTS
+                   and a * n * max(batch, 1) <= _DENSE_BATCH_ELTS)
+
+    def step_addr(opc, pc):
         """Current micro-op's target address.  The uniform stream is the
         seed engine's counter hash, bit-identical under ``rmw_loop``."""
-        h = _hash(core * 7919 + opc * 104729 + rp.seed)
-        na = rp.n_addrs
-        if not isinstance(na, int):
-            na = na.astype(jnp.uint32)
+        h = _hash(iota * 7919 + opc * 104729 + rp.seed)
         uni = (h % na).astype(jnp.int32)
-        fix = (pt["addr_arg"][pc].astype(jnp.uint32) % na).astype(jnp.int32)
-        mode = pt["addr_mode"][pc]
-        out = jnp.where(mode == ADDR_FIXED, fix, uni)
-        if int(np.any(np.asarray(prog.addr_mode) == ADDR_ZIPF)):
-            out = jnp.where(mode == ADDR_ZIPF,
+        out = jnp.where(mode_is_fix[pc], fix_tab[pc], uni)
+        if has_zipf:
+            out = jnp.where(mode_is_zipf[pc],
                             zipf_index(h, rp.n_addrs, rp.zipf_skew), out)
         return out
 
@@ -188,32 +296,27 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         st, tmr, pc = s["st"], s["tmr"], s["pc"]
         # ---- timers ----
         tmr = jnp.maximum(tmr - 1, 0)
+        t0 = tmr == 0
 
-        # ---- WORK done -> issue current micro-op's acquire ----
-        start = (st == WORK) & (tmr == 0) & ~is_worker
-        new_addr = step_addr(jnp.arange(n), s["opc"], pc)
-        addr = jnp.where(start, new_addr, s["addr"])
-        st = jnp.where(start, REQ, st)
-        phase = jnp.where(start, P_ACQ, s["phase"])
-        tmr = jnp.where(start, rp.lat, tmr)
-
-        # ---- BACKOFF done -> reissue acquire ----
-        rb = (st == BACKOFF) & (tmr == 0)
-        st = jnp.where(rb, REQ, st)
-        phase = jnp.where(rb, P_ACQ, phase)
-        tmr = jnp.where(rb, rp.lat, tmr)
-
-        # ---- MOD done -> issue release/SC ----
-        md = (st == MOD) & (tmr == 0)
-        st = jnp.where(md, REQ, st)
-        phase = jnp.where(md, P_REL, phase)
-        tmr = jnp.where(md, rp.lat, tmr)
+        # ---- timer-expiry dispatch (one predicated block) ----
+        # WORK -> issue current micro-op's acquire; BACKOFF -> reissue
+        # acquire; MOD -> issue release/SC.  The three source states are
+        # mutually exclusive, so a single fused REQ/latency write covers
+        # what used to be three identical where-chains.
+        start = t0 & (st == WORK) & ~is_worker
+        rb = t0 & (st == BACKOFF)
+        md = t0 & (st == MOD)
+        issue = start | rb | md
+        addr = jnp.where(start, step_addr(s["opc"], pc), s["addr"])
+        phase = jnp.where(md, P_REL,
+                          jnp.where(start | rb, P_ACQ, s["phase"]))
+        st = jnp.where(issue, REQ, st)
+        tmr = jnp.where(issue, rp.lat, tmr)
 
         # ---- RESP arrives: the current micro-op retires ----
-        big32 = jnp.iinfo(jnp.int32).max
-        ra = (st == RESP) & (tmr == 0)
+        ra = t0 & (st == RESP)
         done = ra & (s["nxt"] == NXT_WORK_DONE)
-        at_bar = done & (pt["kind"][pc] == K_BARRIER)
+        at_bar = done & kind_is_bar[pc]
         pc_next = (pc + 1) % L
         wrap = done & (pc_next == 0)             # program completed one op
         go_work = done & ~at_bar
@@ -221,15 +324,19 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         st = jnp.where(at_bar, BARWAIT, st)
         pc = jnp.where(done, pc_next, pc)
         # next step's local work (current step's for non-retiring cores)
-        pre_dur = pt["pre_mult"][pc] * rp.work + pt["pre_add"][pc]
+        pre_dur = pre_dur_tab[pc]
         tmr = jnp.where(go_work, pre_dur, tmr)
         ops = s["ops"] + wrap
         opc = s["opc"] + done
         bar_cnt = s["bar_cnt"] + at_bar
-        addr_ops = s["addr_ops"].at[jnp.where(done, addr, a)].add(
-            1, mode="drop")
+        if dense_banks:
+            addr_ops = s["addr_ops"] + jnp.sum(
+                (addr[None, :] == ba[:, None]) & done[None, :], axis=1)
+        else:
+            addr_ops = s["addr_ops"].at[jnp.where(done, addr, a)].add(
+                1, mode="drop")
         to_mod = ra & (s["nxt"] == NXT_MOD)
-        mod_dur = pt["mod_mult"][pc] * rp.modify + pt["mod_add"][pc]
+        mod_dur = mod_dur_tab[pc]
         st = jnp.where(to_mod, MOD, st)
         tmr = jnp.where(to_mod, mod_dur, tmr)
         to_bo = ra & (s["nxt"] == NXT_BACKOFF)
@@ -240,13 +347,13 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         streak = jnp.where(to_bo, jnp.minimum(s["streak"] + 1, exp_cap),
                            jnp.where(done, 0, s["streak"]))
         bo_len = (rp.backoff << jnp.maximum(streak - 1, 0)) + (_hash(
-            jnp.arange(n) + cyc) % 32).astype(jnp.int32)
+            iota + cyc) % 32).astype(jnp.int32)
         tmr = jnp.where(to_bo, bo_len, tmr)
 
         # ---- barrier: last arrival releases every waiter (broadcast) ----
         bar_msgs = jnp.zeros((), jnp.int32)
-        if int(np.any(np.asarray(prog.kind) == K_BARRIER)):
-            min_bar = jnp.min(jnp.where(is_worker, big32, bar_cnt))
+        if has_bar:
+            min_bar = jnp.min(jnp.where(is_worker, _BIG, bar_cnt))
             rel_bar = (st == BARWAIT) & (bar_cnt <= min_bar)
             st = jnp.where(rel_bar, WORK, st)
             tmr = jnp.where(rel_bar, rp.lat + pre_dur, tmr)
@@ -260,12 +367,9 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         # A new request consumes one network slot ONCE; accepted requests are
         # "parked" in the bank input queue and no longer use the network.
         fresh = (st == REQ) & (tmr == 0) & ~is_worker & ~s["parked"]
-        rot = (jnp.arange(n) + cyc * 97) % n
-        big = jnp.iinfo(jnp.int32).max
+        shift = (cyc * 97) % n
+        rot = (iota + shift) % n
         all_req = fresh | w_arr
-        order = jnp.argsort(jnp.where(all_req, rot, big))
-        rank = jnp.zeros((n,), jnp.int32).at[order].set(
-            jnp.arange(n, dtype=jnp.int32))
         # responses issued last cycle share the same links, and parked
         # requests at saturated banks back up through switch buffers
         # (head-of-line blocking): both shrink the request budget.
@@ -276,7 +380,7 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
                             s["parked"].sum() // jnp.maximum(rp.hol_block, 1),
                             0)
         budget = jnp.maximum(rp.net_bw - s["resp_prev"] - hol, 1)
-        accepted = all_req & (rank < budget)
+        accepted = accept_rotating_fair(all_req, rot, budget, shift=shift)
         net_stall = s["net_stall"] + (all_req & ~accepted).sum()
         w_acc = w_arr & accepted
         w_served = s["w_served"] + w_acc
@@ -287,24 +391,44 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
 
         # ---- bank arbitration: FIFO by arrival stamp among parked ----
         arrived = parked & (st == REQ)
-        key = arr_cyc * (n + 1) + rot            # FIFO key (int32-safe)
-        bkey = jnp.where(arrived, key, big)
-        best = jnp.full((a,), big, jnp.int32).at[addr].min(
-            jnp.where(arrived, bkey, big))
-        winner = arrived & (bkey == best[addr])
+        if key_fits_int32:
+            # fused lexicographic key, one segment-min (the common case:
+            # the horizon is known at trace time to keep it in int32)
+            bkey = jnp.where(arrived, arr_cyc * (n + 1) + rot, _BIG)
+            if dense_banks:            # few banks: vectorized 2-D min
+                best = jnp.min(jnp.where(addr[None, :] == ba[:, None],
+                                         bkey[None, :], _BIG), axis=1)
+            else:                      # many banks: one segment-min
+                best = jnp.full((a,), _BIG, jnp.int32).at[addr].min(bkey)
+            winner = arrived & (bkey == best[addr])
+            valid_b = best != _BIG
+            rot_w = best % (n + 1)          # key encodes the winner's rot
+        else:
+            # long horizons: chained segment-mins, no overflow anywhere
+            winner, rot_w, valid_b = _fifo_lex_best(arrived, arr_cyc, rot,
+                                                    addr, a)
         parked = parked & ~winner                    # served
         arr_cyc = jnp.where(winner, -1, arr_cyc)
+        # decode each bank's winning CORE from its winning rot (the
+        # rotation is affine) — protocols use it to update bank state
+        # densely, O(a) instead of an n-lane scatter per array
+        win_core = jnp.where(valid_b, (rot_w - shift) % n, n)
+        wcs = jnp.minimum(win_core, n - 1)           # gather-safe index
 
         # ---- protocol plugin handles the bank winners ----
         is_acq = winner & (phase == P_ACQ)
         is_rel = winner & (phase == P_REL)
+        acq_b = valid_b & (phase[wcs] == P_ACQ)
+        rel_b = valid_b & (phase[wcs] == P_REL)
         bank_ops = s["bank_ops"] + winner.sum()
         cs = dict(st=st, tmr=tmr, nxt=s["nxt"], polls=s["polls"],
                   msgs=s["msgs"] + 2 * winner.sum() + bar_msgs,  # req + resp
                   **{k: s["xc"][k] for k in xc_keys})
         ctx = proto_registry.Ctx(p=rp, n=n, a=a, q_cap=q_cap,
                                  is_acq=is_acq, is_rel=is_rel,
-                                 wa=addr, wc=jnp.arange(n),
+                                 wa=addr, wc=iota, ba=ba,
+                                 win_core=win_core, acq_b=acq_b,
+                                 rel_b=rel_b,
                                  mod_dur=mod_dur)
         cs, bank = proto.on_access(ctx, cs, dict(s["bank"]))
 
@@ -342,7 +466,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None
         return out, ev
 
     final, trace = lax.scan(step, state,
-                            jnp.arange(p.cycles, dtype=jnp.int32))
+                            jnp.arange(p.cycles, dtype=jnp.int32),
+                            unroll=max(int(p.unroll), 1))
     # flatten protocol state into the result dict (names never collide
     # with engine keys)
     flat = {k: v for k, v in final.items() if k not in ("bank", "xc")}

@@ -5,77 +5,210 @@ The benchmark figures each run dozens of ``SimParams`` configurations.
 ``(seed, n_addrs, lat, work, ...)`` used to pay one full XLA compile per
 point.  This runner groups configurations by their static fingerprint
 (protocol, workload program, core count, cycle count, queue capacity,
-group count, trace flag), lifts
+group count, trace flag, unroll factor), lifts
 every other scalar into a traced axis (``sim.DYN_FIELDS``), and runs each
 group through a single ``jax.vmap``-ed compilation of the engine.
 
-``n_addrs`` is traced too: the engine allocates banks for the group's
-maximum and runs the live count through the address hash, so mixed
-contention levels share one compile.  Results are **identical** to
+Executor shape (the hot path behind every figure):
+
+* **Chunking** — each fingerprint group is split into ``max_batch``-point
+  chunks (default 256, ``REPRO_SWEEP_MAX_BATCH``), so a 4096-point grid
+  never materializes 4096 copies of the engine state at once; chunks of
+  equal length reuse one compilation.
+* **Overlapped dispatch** — chunks are dispatched ahead of
+  materialization through a bounded look-ahead window (4 chunks in
+  flight): jax computations are asynchronous, so the next chunks'
+  host-side setup and device work overlap the current chunk's
+  execution instead of blocking per group, while the window bounds how
+  many chunk outputs are resident at once.
+* **One transfer per chunk** — results come back through a single
+  ``jax.device_get`` of the whole result pytree per chunk (the former
+  per-key ``np.asarray`` did one host sync per array).
+* **Device sharding** — with more than one device visible, chunks are
+  padded to a multiple of ``jax.device_count()`` and their batch axis is
+  sharded across devices (``NamedSharding``); the single-device path is
+  byte-for-byte the old behaviour.
+* **Persistent compilation cache** — :func:`enable_persistent_cache`
+  points jax at an on-disk cache so repeated benchmark runs skip
+  recompiles entirely (``benchmarks/run.py`` calls it at startup).
+
+``n_addrs`` is traced too: configs bucket by the next power of two of
+their address count (``_bucket_a``), the engine allocates banks for the
+bucket and runs the live count through the address hash — so nearby
+contention levels share one compile without a hot 1-address point
+paying a 256-bank arbitration loop.  Results are **identical** to
 per-config ``sim.run`` calls — all engine state is integer, and the
 traced scalars feed the same arithmetic the Python constants did
-(``tests/test_sweep.py`` locks this in).
+(``tests/test_sweep.py`` locks this in, including chunked and sharded
+execution).
 
-EXPERIMENTS.md §Sweep records the measured speedup; the ``sweep_speedup``
-benchmark (``benchmarks/bench_sweep.py``) regenerates it.
+EXPERIMENTS.md §Sweep and §Engine-throughput record the measured
+speedups; ``benchmarks/bench_sweep.py`` and ``benchmarks/bench_engine.py``
+regenerate them.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sim import (DYN_FIELDS, SimParams, derive_metrics, simulate)
+from repro.core.sim import (DYN_FIELDS, _DENSE_BANK_ELTS, SimParams,
+                            derive_metrics, simulate)
 
 #: fields that must match for configs to share one compilation — the
-#: workload's compiled program and the trace shape are baked into the
-#: scan body, so both are part of the fingerprint
+#: workload's compiled program, the trace shape and the scan unroll
+#: factor are baked into the scan body, so all are part of the fingerprint
 STATIC_FIELDS = ("protocol", "workload", "n_cores", "cycles", "q_slots",
-                 "n_groups", "record_trace")
+                 "n_groups", "record_trace", "unroll")
+
+#: default ceiling on points per compiled vmap invocation
+#: (``REPRO_SWEEP_MAX_BATCH`` overrides — read at each ``sweep()`` call,
+#: so setting it after import still takes effect)
+DEFAULT_MAX_BATCH = 256
+
+
+def enable_persistent_cache(path: Optional[str] = None) -> str:
+    """Enable jax's on-disk compilation cache (idempotent).
+
+    Repeated benchmark runs re-trace the same engine fingerprints; with
+    the cache enabled the XLA compile step is skipped on every run after
+    the first.  ``path`` defaults to ``$REPRO_CACHE_DIR`` or
+    ``~/.cache/lrscwait-repro/jax``.  Returns the cache directory.
+    """
+    path = path or os.environ.get(
+        "REPRO_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "lrscwait-repro",
+                     "jax"))
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # cache even fast/small compiles — the sweep fingerprints are many
+    # and individually cheap, but a full benchmark run has dozens
+    for opt, val in (("jax_persistent_cache_min_entry_size_bytes", -1),
+                     ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(opt, val)
+        except AttributeError:          # option not in this jax version
+            pass
+    return path
+
+
+def _bucket_a(n_addrs: int) -> int:
+    """Bank-allocation bucket: next power of two ≥ ``n_addrs``.
+
+    Mixed-contention configs used to share one compile padded to the
+    group's *maximum* address count — a ``n_addrs=1`` point then dragged
+    256 banks of arbitration work through every cycle, and with the
+    scatter-free hot path that padding dominates wall time.  Bucketing
+    by power of two bounds the waste at 2× while keeping the compile
+    count logarithmic in the contention range."""
+    return 1 << max(n_addrs - 1, 0).bit_length()
 
 
 def _static_key(p: SimParams):
-    return tuple(getattr(p, f) for f in STATIC_FIELDS)
+    return tuple(getattr(p, f) for f in STATIC_FIELDS) + (_bucket_a(p.n_addrs),)
 
 
-@partial(jax.jit, static_argnums=0)
-def _sweep_group(rep: SimParams, dyn: Dict[str, jnp.ndarray]):
-    return jax.vmap(lambda d: simulate(rep, dyn=d))(dyn)
+@partial(jax.jit, static_argnums=(0, 2))
+def _sweep_group(rep: SimParams, dyn: Dict[str, jnp.ndarray], batch: int):
+    # `batch` sizes the engine's dense-vs-scatter arbitration choice for
+    # the vmapped working set; it is already implied by dyn's shapes, so
+    # making it static adds no extra compiles
+    return jax.vmap(lambda d: simulate(rep, dyn=d, batch=batch))(dyn)
 
 
-def sweep(configs: Sequence[SimParams]) -> List[Dict[str, np.ndarray]]:
+def _batch_sharding():
+    """(sharding, n_devices) for the chunk batch axis; (None, 1) on a
+    single device — that path is unchanged from the unsharded runner."""
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return None, 1
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mesh = Mesh(np.asarray(devs), ("batch",))
+    return NamedSharding(mesh, PartitionSpec("batch")), len(devs)
+
+
+def sweep(configs: Sequence[SimParams],
+          max_batch: Optional[int] = None) -> List[Dict[str, np.ndarray]]:
     """Run every configuration; returns one result dict per config (same
     keys and values as ``sim.run``), in input order.
 
     Configurations sharing a static fingerprint are batched through one
-    vmapped compile; a heterogeneous list degrades gracefully to one
-    compile per fingerprint.
+    vmapped compile in ``max_batch``-point chunks; a heterogeneous list
+    degrades gracefully to one compile per fingerprint.  Chunks are
+    dispatched up to a 4-chunk look-ahead window before results are
+    materialized (one ``device_get`` per chunk), and the batch axis is
+    sharded across devices when more than one is visible.
     """
+    if max_batch is None:
+        max_batch = int(os.environ.get("REPRO_SWEEP_MAX_BATCH",
+                                       DEFAULT_MAX_BATCH))
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
     groups: Dict[tuple, List[int]] = {}
     for i, c in enumerate(configs):
         groups.setdefault(_static_key(c), []).append(i)
+    sharding, ndev = _batch_sharding()
     results: List[Dict[str, np.ndarray]] = [None] * len(configs)  # type: ignore
-    for idxs in groups.values():
-        grp = [configs[i] for i in idxs]
-        # bank allocation covers the group's largest address space
-        rep = dataclasses.replace(grp[0], n_addrs=max(c.n_addrs for c in grp))
-        dyn = {f: jnp.asarray([getattr(c, f) for c in grp], jnp.int32)
-               for f in DYN_FIELDS}
-        out = _sweep_group(rep, dyn)
-        out_np = {k: np.asarray(v) for k, v in out.items()}
-        for j, i in enumerate(idxs):
+    pending: List[tuple] = []                    # dispatched, not fetched
+
+    def materialize(part, out):
+        # one device->host transfer per chunk (the whole result pytree)
+        out_np = jax.device_get(out)
+        for j, i in enumerate(part):             # padding rows never read
             res = {k: v[j] for k, v in out_np.items()}
             results[i] = derive_metrics(
                 res, min(configs[i].n_workers, configs[i].n_cores),
                 configs[i].cycles)
+
+    # dispatch chunks ahead of materialization: jax computations are
+    # async, so the next chunk's host-side setup (and, with >1 device,
+    # its execution) overlaps the previous chunk's run.  The look-ahead
+    # window bounds how many chunk outputs are resident on device at
+    # once — a record_trace point carries a (cycles, n) trace, so
+    # unbounded dispatch would defeat the max_batch memory bound.
+    window = 4
+    for idxs in groups.values():
+        grp = [configs[i] for i in idxs]
+        # bank allocation = the group's power-of-two bucket (identical
+        # for every member, so every chunk reuses one compilation)
+        rep = dataclasses.replace(grp[0],
+                                  n_addrs=_bucket_a(grp[0].n_addrs))
+        # auto chunk: keep the vmapped dense-arbitration working set
+        # (chunk, a, n) inside the engine's cache-friendly budget —
+        # measured 2.3× on a 96-point a=16 grid vs one big chunk; grids
+        # on the scatter path (large a*n) just take max_batch.
+        # ``max_batch`` stays the hard memory ceiling either way.
+        an = rep.n_addrs * rep.n_cores
+        chunk_cap = max_batch
+        if an <= _DENSE_BANK_ELTS:
+            chunk_cap = max(1, min(max_batch, _DENSE_BANK_ELTS // an))
+        for lo in range(0, len(idxs), chunk_cap):
+            part = idxs[lo:lo + chunk_cap]
+            chunk = [configs[i] for i in part]
+            # pad the tail chunk to the full chunk length (and to a
+            # device multiple) so it reuses the full chunk's compile
+            want = chunk_cap if len(idxs) > chunk_cap else len(chunk)
+            want += (-want) % ndev
+            padded = chunk + [chunk[-1]] * (want - len(chunk))
+            dyn = {f: jnp.asarray([getattr(c, f) for c in padded], jnp.int32)
+                   for f in DYN_FIELDS}
+            if sharding is not None:
+                dyn = jax.device_put(dyn, sharding)
+            pending.append((part, _sweep_group(rep, dyn, len(padded))))
+            if len(pending) >= window:
+                materialize(*pending.pop(0))
+    for part, out in pending:
+        materialize(part, out)
     return results
 
 
-def sweep_grid(base: SimParams, **axes: Sequence) -> List[Dict[str, np.ndarray]]:
+def sweep_grid(base: SimParams, max_batch: Optional[int] = None,
+               **axes: Sequence) -> List[Dict[str, np.ndarray]]:
     """Cartesian sweep: ``sweep_grid(base, n_addrs=(1, 16), seed=(0, 1))``
     runs every combination (last axis fastest) and returns results plus a
     ``_config`` entry recording each point's SimParams."""
@@ -86,7 +219,7 @@ def sweep_grid(base: SimParams, **axes: Sequence) -> List[Dict[str, np.ndarray]]
     for name, values in axes.items():
         points = [dataclasses.replace(pt, **{name: v})
                   for pt in points for v in values]
-    results = sweep(points)
+    results = sweep(points, max_batch=max_batch)
     for pt, res in zip(points, results):
         res["_config"] = pt
     return results

@@ -1,0 +1,156 @@
+"""Arbitration-primitive equivalence and overflow regression tests.
+
+The engine's per-cycle hot path replaced two O(n log n)/overflow-prone
+constructs with linear-time ones:
+
+* rotating-fair network acceptance: a stable ``jnp.argsort`` ranking
+  became a permutation-scatter + cumsum rank
+  (:func:`repro.core.sim.accept_rotating_fair`);
+* per-bank FIFO arbitration: the fused ``arr_cyc * (n + 1) + rot`` int32
+  key became two chained segment-mins
+  (:func:`repro.core.sim.fifo_bank_winners`).
+
+Both must select **exactly** the same winners as the constructs they
+replaced — the protocol golden values in ``tests/test_protocols.py``
+depend on it.  Hypothesis drives random (request-mask, budget, rotation)
+triples against reference implementations of the old paths; the
+overflow test pins the one behaviour that intentionally changed: at
+``n_cores = 1024`` the old key wrapped past int32 once a request's
+arrival stamp crossed ~2.09M cycles, inverting FIFO order, while the
+new path serves the true oldest request over the whole int32 horizon.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sim import accept_rotating_fair, fifo_bank_winners
+
+
+# ---- reference implementations: the pre-overhaul constructs ----------
+
+def _accept_argsort_ref(all_req, rot, budget):
+    """The former acceptance path: stable argsort of rotated priority."""
+    n = all_req.shape[0]
+    big = np.iinfo(np.int32).max
+    order = np.argsort(np.where(all_req, rot, big), kind="stable")
+    rank = np.zeros(n, np.int32)
+    rank[order] = np.arange(n, dtype=np.int32)
+    return all_req & (rank < budget)
+
+
+def _fifo_key_ref(arrived, arr_cyc, rot, addr, a, n, dtype=np.int64):
+    """The former FIFO path: fused arrival-stamp/rotation key (computed
+    in ``dtype`` — int64 gives the intended no-overflow semantics, int32
+    reproduces the latent wrap bug)."""
+    big = np.iinfo(dtype).max
+    key = (arr_cyc.astype(dtype) * (n + 1) + rot).astype(dtype)
+    bkey = np.where(arrived, key, big)
+    best = np.full(a, big, dtype)
+    np.minimum.at(best, addr[arrived], bkey[arrived])
+    return arrived & (bkey == best[addr])
+
+
+def _case(rng, n):
+    """One random (request-mask, rotation, bank-map, stamps) tuple."""
+    all_req = rng.random(n) < rng.uniform(0.05, 0.95)
+    rot = rng.permutation(n).astype(np.int32)
+    a = int(rng.integers(1, max(n // 4, 2)))
+    addr = rng.integers(0, a, n).astype(np.int32)
+    arr_cyc = rng.integers(0, 5000, n).astype(np.int32)
+    return all_req, rot, a, addr, arr_cyc
+
+
+def test_accept_matches_argsort_reference_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=120, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 96),
+           st.integers(0, 130))
+    def prop(seed, n, budget):
+        rng = np.random.default_rng(seed)
+        all_req, rot, _, _, _ = _case(rng, n)
+        want = _accept_argsort_ref(all_req, rot, budget)
+        got = np.asarray(accept_rotating_fair(
+            jnp.asarray(all_req), jnp.asarray(rot), jnp.int32(budget)))
+        assert np.array_equal(got, want), (seed, n, budget)
+        # the engine's affine-rotation fast path (roll/cumsum/roll, no
+        # scatter) must agree with the argsort reference too
+        shift = int(rng.integers(0, 10 * n)) % n
+        arot = ((np.arange(n) + shift) % n).astype(np.int32)
+        want2 = _accept_argsort_ref(all_req, arot, budget)
+        got2 = np.asarray(accept_rotating_fair(
+            jnp.asarray(all_req), jnp.asarray(arot), jnp.int32(budget),
+            shift=jnp.int32(shift)))
+        assert np.array_equal(got2, want2), (seed, n, budget, shift)
+
+    prop()
+
+
+def test_fifo_winners_match_key_reference_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=120, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 96))
+    def prop(seed, n):
+        rng = np.random.default_rng(seed)
+        all_req, rot, a, addr, arr_cyc = _case(rng, n)
+        arrived = all_req
+        want = _fifo_key_ref(arrived, arr_cyc, rot, addr, a, n)
+        got = np.asarray(fifo_bank_winners(
+            jnp.asarray(arrived), jnp.asarray(arr_cyc), jnp.asarray(rot),
+            jnp.asarray(addr), a))
+        assert np.array_equal(got, want), (seed, n)
+        # exactly one winner per bank with >=1 arrived request
+        banks = np.unique(addr[arrived])
+        per_bank = np.bincount(addr[got], minlength=a)
+        assert np.array_equal(np.sort(np.nonzero(per_bank)[0]), banks)
+        assert per_bank.max(initial=0) <= 1
+
+    prop()
+
+
+def test_fifo_long_horizon_no_int32_overflow():
+    """Regression for the latent int32 FIFO-key overflow: at n=1024 the
+    old ``arr_cyc * 1025 + rot`` key wraps once ``arr_cyc`` crosses
+    ~2.09M cycles, making the *younger* request win.  The segment-min
+    path keeps true FIFO order at the full int32 horizon."""
+    n, a = 1024, 4
+    wrap_stamp = (np.iinfo(np.int32).max // (n + 1)) + 16     # wraps old key
+    old_stamp = wrap_stamp - 1000                             # older, no wrap
+    arrived = np.zeros(n, bool)
+    arrived[[3, 700]] = True
+    addr = np.zeros(n, np.int32)                              # same bank
+    arr_cyc = np.full(n, -1, np.int32)
+    arr_cyc[3] = wrap_stamp                                   # younger
+    arr_cyc[700] = old_stamp                                  # true oldest
+    rot = np.roll(np.arange(n, dtype=np.int32), 7)
+    got = np.asarray(fifo_bank_winners(
+        jnp.asarray(arrived), jnp.asarray(arr_cyc), jnp.asarray(rot),
+        jnp.asarray(addr), a))
+    assert got[700] and not got[3]                            # FIFO upheld
+    # the int64 reference agrees; the int32 reference reproduces the bug
+    ref64 = _fifo_key_ref(arrived, arr_cyc, rot, addr, a, n, np.int64)
+    ref32 = _fifo_key_ref(arrived, arr_cyc, rot, addr, a, n, np.int32)
+    assert np.array_equal(got, ref64)
+    assert ref32[3] and not ref32[700]                        # the old bug
+
+
+def test_fifo_long_horizon_random_stamps():
+    """Lexicographic (stamp, rot) order holds across the whole int32
+    stamp range, n=1024, many banks."""
+    rng = np.random.default_rng(7)
+    n, a = 1024, 16
+    arrived = rng.random(n) < 0.5
+    addr = rng.integers(0, a, n).astype(np.int32)
+    arr_cyc = rng.integers(0, np.iinfo(np.int32).max - 1, n,
+                           dtype=np.int64).astype(np.int32)
+    rot = rng.permutation(n).astype(np.int32)
+    want = _fifo_key_ref(arrived, arr_cyc, rot, addr, a, n, np.int64)
+    got = np.asarray(fifo_bank_winners(
+        jnp.asarray(arrived), jnp.asarray(arr_cyc), jnp.asarray(rot),
+        jnp.asarray(addr), a))
+    assert np.array_equal(got, want)

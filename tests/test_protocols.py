@@ -134,6 +134,23 @@ def test_plugin_engine_matches_seed_golden(proto):
         assert {k: obs[k] for k in want} == want, (proto, i)
 
 
+@pytest.mark.parametrize("unroll", (2, 8))
+@pytest.mark.parametrize("proto", PROTOCOLS)
+def test_golden_invariant_under_unroll(proto, unroll):
+    """The scan unroll factor is a pure compilation knob: every seed
+    protocol reproduces its golden values at unroll=2 and unroll=8
+    exactly (the default unroll=1 path is covered by the test above).
+    Both golden configs share one static fingerprint, so each
+    (protocol, unroll) pair costs a single 2-point vmapped compile."""
+    from repro.core.sweep import sweep
+    cfgs = [SimParams(protocol=proto, unroll=unroll, **cfg)
+            for cfg in GOLDEN_CONFIGS[:2]]
+    for i, r in enumerate(sweep(cfgs)):
+        obs = _observe(r)
+        want = GOLDEN[f"{proto}/{i}"]
+        assert {k: obs[k] for k in want} == want, (proto, unroll, i)
+
+
 @pytest.mark.parametrize("name", sorted(GOLDEN_EXTRA))
 def test_plugin_engine_matches_seed_golden_extra(name):
     cfg, want = GOLDEN_EXTRA[name]
