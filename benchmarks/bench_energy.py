@@ -2,38 +2,43 @@
 
 Per-event energies fit once against the paper's column (calibration), then
 the model is evaluated per protocol; residuals reported. Also derives the
-headline efficiency ratios (7.1× vs LRSC, 8.8× vs locks)."""
+headline efficiency ratios (7.1× vs LRSC, 8.8× vs locks) and checks the
+frozen calibration (``costmodel.CALIBRATED_ENERGY`` — the fit every
+``run()``/``sweep()`` uses for ``energy_pj_per_op``) against the fresh
+fit, so drift between the engine and the frozen constants is visible in
+every benchmark run.  Stats go through ``metrics.energy_stats`` so the
+fit sees the full required-key contract (including ``bar_cyc``)."""
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.costmodel import PAPER_ENERGY, energy_per_op, fit_energy
+from repro.core.costmodel import (PAPER_ENERGY, default_fit, energy_per_op,
+                                  fit_energy)
+from repro.core.metrics import energy_stats
 from repro.core.sim import SimParams, run
 
 CYCLES = 12_000
 
 
 def _stats():
-    stats = {}
-    for proto in ("amo", "colibri", "lrsc", "amo_lock"):
-        kw = dict(backoff=128, backoff_exp=1) if proto == "amo_lock" else {}
-        r = run(SimParams(protocol=proto, n_addrs=1, cycles=CYCLES, **kw))
-        stats[proto] = {k: float(r[k]) for k in
-                        ("msgs", "bank_ops", "active_cyc", "sleep_cyc",
-                         "backoff_cyc")}
-        stats[proto]["ops"] = float(r["ops"].sum())
-    return stats
+    return {proto: energy_stats(run(SimParams(
+        protocol=proto, n_addrs=1, cycles=CYCLES,
+        **(dict(backoff=128, backoff_exp=1) if proto == "amo_lock" else {}))))
+        for proto in ("amo", "colibri", "lrsc", "amo_lock")}
 
 
 def rows() -> List[Dict]:
     stats = _stats()
     fit = fit_energy(stats)
+    frozen = default_fit()
     out = []
     for proto, target in PAPER_ENERGY.items():
         model = energy_per_op(stats[proto], fit)
         out.append({"table": "energy", "protocol": proto,
                     "paper_pj_per_op": target,
                     "model_pj_per_op": round(model, 1),
+                    "frozen_fit_pj_per_op":
+                        round(energy_per_op(stats[proto], frozen), 1),
                     "err_pct": round(100 * (model - target) / target, 1)})
     return out
 
@@ -42,4 +47,7 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
     t = {r["protocol"]: r["model_pj_per_op"] for r in rs}
     return {"lrsc_over_colibri_energy": t["lrsc"] / t["colibri"],      # ~7.1
             "lock_over_colibri_energy": t["amo_lock"] / t["colibri"],  # ~8.8
-            "max_energy_model_err_pct": max(abs(r["err_pct"]) for r in rs)}
+            "max_energy_model_err_pct": max(abs(r["err_pct"]) for r in rs),
+            "frozen_fit_max_drift_pct": max(
+                abs(100 * (r["frozen_fit_pj_per_op"] - r["model_pj_per_op"])
+                    / max(r["model_pj_per_op"], 1e-9)) for r in rs)}

@@ -53,7 +53,10 @@ def rows(cycles: int = CYCLES) -> List[Dict]:
                     "updates_per_cycle": r["throughput"],
                     "polls": int(r["polls"]),
                     "msgs": int(r["msgs"]),
-                    "sleep_cyc": int(r["sleep_cyc"])})
+                    "sleep_cyc": int(r["sleep_cyc"]),
+                    "jain_fairness": r["jain_fairness"],
+                    "lat_p95": r["lat_p95"],
+                    "energy_pj_per_op": r["energy_pj_per_op"]})
     return out
 
 

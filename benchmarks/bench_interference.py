@@ -36,7 +36,10 @@ def rows(cycles: int = CYCLES) -> List[Dict]:
         rel = r["worker_rate"] / max(base["worker_rate"], 1e-9)
         out.append({"figure": "fig5", "protocol": p.protocol,
                     "pollers": 256 - p.n_workers, "workers": p.n_workers,
-                    "relative_worker_perf": rel})
+                    "relative_worker_perf": rel,
+                    "jain_fairness": r["jain_fairness"],
+                    "lat_p95": r["lat_p95"],
+                    "energy_pj_per_op": r["energy_pj_per_op"]})
     return out
 
 

@@ -43,23 +43,27 @@ def rows(cycles: int = CYCLES) -> List[Dict]:
                     "ops_per_cycle": r["throughput"],
                     "atomics_per_cycle": float(r["opc"].sum()) / p.cycles,
                     "slowest_core": r["fairness_min"],
-                    "fastest_core": r["fairness_max"]})
+                    "fastest_core": r["fairness_max"],
+                    "jain_fairness": r["jain_fairness"],
+                    "lat_p95": r["lat_p95"],
+                    "energy_pj_per_op": r["energy_pj_per_op"]})
     return out
 
 
 def headline(rs: List[Dict]) -> Dict[str, float]:
     t = {(r["protocol"], r["cores"]): r for r in rs}
     col, lrsc = t[("colibri", 8)], t[("lrsc", 8)]
-    span = lambda r: r["fastest_core"] / max(r["slowest_core"], 1e-9)
     return {
         "colibri_over_lrsc_8cores":
             col["ops_per_cycle"] / lrsc["ops_per_cycle"],
         "colibri_over_lrsc_256cores":
             t[("colibri", 256)]["ops_per_cycle"]
             / t[("lrsc", 256)]["ops_per_cycle"],
-        "colibri_fairness_span_256": span(t[("colibri", 256)]),
+        # Jain index replaces the old fastest/max(slowest, 1e-9) span,
+        # which reported a meaningless ~1e9 once LRSC starved a core
+        "colibri_jain_256": t[("colibri", 256)]["jain_fairness"],
+        "lrsc_jain_256": t[("lrsc", 256)]["jain_fairness"],
         "hier_over_colibri_256":
             t[("colibri_hier", 256)]["ops_per_cycle"]
             / t[("colibri", 256)]["ops_per_cycle"],
-        "lrsc_fairness_span_256": span(t[("lrsc", 256)]),
     }

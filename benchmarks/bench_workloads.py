@@ -63,15 +63,21 @@ def rows(cycles: int = CYCLES) -> List[Dict]:
         row = acc.setdefault((wl, proto), {
             "figure": "workload_grid", "workload": wl, "protocol": proto,
             "cores": p.n_cores, "ops_per_cycle": 0.0,
-            "atomics_per_cycle": 0.0, "polls": 0, "msgs": 0, "n": 0})
+            "atomics_per_cycle": 0.0, "polls": 0, "msgs": 0,
+            "jain_fairness": 0.0, "lat_p95": 0.0,
+            "energy_pj_per_op": 0.0, "n": 0})
         row["ops_per_cycle"] += r["throughput"]
         row["atomics_per_cycle"] += float(r["opc"].sum()) / p.cycles
         row["polls"] += int(r["polls"])
         row["msgs"] += int(r["msgs"])
+        row["jain_fairness"] += r["jain_fairness"]
+        row["lat_p95"] += r["lat_p95"]
+        row["energy_pj_per_op"] += r["energy_pj_per_op"]
         row["n"] += 1
     for row in acc.values():                     # mean over seeds
-        row["ops_per_cycle"] /= row["n"]
-        row["atomics_per_cycle"] /= row["n"]
+        for k in ("ops_per_cycle", "atomics_per_cycle", "jain_fairness",
+                  "lat_p95", "energy_pj_per_op"):
+            row[k] /= row["n"]
         out.append(row)
     return out
 

@@ -33,8 +33,9 @@ def main(argv=None) -> None:
     from benchmarks import (bench_area, bench_energy, bench_engine,
                             bench_histogram, bench_interference,
                             bench_locks, bench_queue, bench_scatter_kernel,
-                            bench_sweep, bench_workloads)
+                            bench_sweep, bench_workloads, fig_summary)
     benches = {
+        "summary": fig_summary,
         "fig3_histogram": bench_histogram,
         "fig4_locks": bench_locks,
         "fig5_interference": bench_interference,

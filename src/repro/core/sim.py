@@ -49,8 +49,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import metrics as metrics_mod
 from repro.core import protocols as proto_registry
 from repro.core import workloads as wl_registry
+from repro.core.metrics import LAT_BINS, LAT_SUB
 from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, NXT_BACKOFF,
                                        NXT_MOD, NXT_WORK_DONE, P_ACQ, P_REL,
                                        REQ, RESP, SLEEP, WORK)
@@ -235,6 +237,7 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         opc=jnp.zeros((n,), jnp.int32),          # per-core op counter
         streak=jnp.zeros((n,), jnp.int32),       # consecutive failures
         ops=jnp.zeros((n,), jnp.int32),          # completed ops
+        acq_start=jnp.zeros((n,), jnp.int32),    # first-issue cycle stamp
         bank=proto.init_bank_state(p, a, n, q_cap),
         xc=proto.init_core_state(p, n),
         # stats
@@ -243,6 +246,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         addr_ops=jnp.zeros((a,), jnp.int32),     # completed atomics per bank
         sleep_cyc=jnp.zeros((), jnp.int32),
         bar_cyc=jnp.zeros((), jnp.int32),        # cycles parked at barriers
+        lat_hist=jnp.zeros((LAT_BINS,), jnp.int32),  # completion latencies
+        lat_max=jnp.zeros((), jnp.int32),        # exact worst completion
         backoff_cyc=jnp.zeros((), jnp.int32),
         active_cyc=jnp.zeros((), jnp.int32),
         bank_ops=jnp.zeros((), jnp.int32),
@@ -262,6 +267,10 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     iota = jnp.arange(n, dtype=jnp.int32)
     ba = jnp.arange(a, dtype=jnp.int32)
     is_worker = iota < rp.n_workers              # first W cores are workers
+    # static: worker machinery folds away when no config has workers
+    # (run() always sees a Python int; sweep drops the axis when the
+    # whole chunk is worker-free)
+    has_workers = not (isinstance(rp.n_workers, int) and rp.n_workers == 0)
     na = rp.n_addrs
     if not isinstance(na, int):
         na = na.astype(jnp.uint32)
@@ -280,6 +289,11 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     key_fits_int32 = p.cycles * (n + 1) + n <= _BIG
     dense_banks = (a * n <= _DENSE_BANK_ELTS
                    and a * n * max(batch, 1) <= _DENSE_BATCH_ELTS)
+    # same dense-vs-scatter choice for the latency histogram accumulator
+    # (it runs over the a bank lanes; LAT_BINS plays the bank-count role)
+    lbins = jnp.arange(LAT_BINS, dtype=jnp.int32)
+    dense_lat = (LAT_BINS * a <= _DENSE_BANK_ELTS
+                 and LAT_BINS * a * max(batch, 1) <= _DENSE_BATCH_ELTS)
 
     def step_addr(opc, pc):
         """Current micro-op's target address.  The uniform stream is the
@@ -329,6 +343,12 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         ops = s["ops"] + wrap
         opc = s["opc"] + done
         bar_cnt = s["bar_cnt"] + at_bar
+        # completion-latency stamp: ``start`` (st==WORK, fresh micro-op)
+        # and ``done`` (st==RESP) are mutually exclusive within a cycle,
+        # so the stamp always predates the retirement that reads it;
+        # retries (BACKOFF reissues) and queue waits keep the original
+        # stamp and therefore count toward the op's latency.
+        acq_start = jnp.where(start, cyc, s["acq_start"])
         if dense_banks:
             addr_ops = s["addr_ops"] + jnp.sum(
                 (addr[None, :] == ba[:, None]) & done[None, :], axis=1)
@@ -360,8 +380,17 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
             bar_msgs = rel_bar.sum().astype(jnp.int32)  # one wake msg each
 
         # ---- workers stream loads (Fig. 5) ----
-        w_tmr = jnp.maximum(s["w_tmr"] - 1, 0)
-        w_arr = is_worker & (w_tmr == 0)         # a load arrives at a bank
+        # the w_tmr/w_served updates are statically elided when the
+        # trace has no workers: the writes are semantically dead at
+        # n_workers == 0 but XLA cannot prove it, and two extra written
+        # (n,) carries push the scan body over a compile cliff (~3×
+        # wall time at 256 cores — EXPERIMENTS.md §Metric-cost)
+        if has_workers:
+            w_tmr = jnp.maximum(s["w_tmr"] - 1, 0)
+            w_arr = is_worker & (w_tmr == 0)     # a load arrives at a bank
+        else:
+            w_tmr = s["w_tmr"]
+            w_arr = jnp.zeros((n,), bool)
 
         # ---- network acceptance (rotating-fair, bounded bandwidth) ----
         # A new request consumes one network slot ONCE; accepted requests are
@@ -383,9 +412,12 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         accepted = accept_rotating_fair(all_req, rot, budget, shift=shift)
         net_stall = s["net_stall"] + (all_req & ~accepted).sum()
         w_acc = w_arr & accepted
-        w_served = s["w_served"] + w_acc
-        w_tmr = jnp.where(w_acc, 2, w_tmr)       # pipelined stream of loads
-        w_tmr = jnp.where(is_worker & (w_tmr == 0), 1, w_tmr)
+        if has_workers:
+            w_served = s["w_served"] + w_acc
+            w_tmr = jnp.where(w_acc, 2, w_tmr)   # pipelined stream of loads
+            w_tmr = jnp.where(is_worker & (w_tmr == 0), 1, w_tmr)
+        else:
+            w_served = s["w_served"]
         parked = s["parked"] | (fresh & accepted)
         arr_cyc = jnp.where(fresh & accepted, cyc, s["arr_cyc"])
 
@@ -440,6 +472,33 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         # network slots consumed by this cycle's responses and protocol
         # side-messages (SuccessorUpdate / WakeUpRequest / Mwait setup)
         st, tmr = cs["st"], cs["tmr"]
+
+        # ---- completion-latency histogram (bank-side accumulation) ----
+        # Every retirement is the timer expiry of a response granted at
+        # a bank this cycle (protocols set st=RESP/nxt=WORK_DONE only at
+        # service time and never disturb a RESP core), and arbitration
+        # guarantees at most one winner per bank — so the histogram
+        # update runs over the ``a`` bank lanes instead of the ``n``
+        # core lanes (a is 1–16 in the hot benchmarks; the core-side
+        # form measured +12 µs/cycle at 256 cores).  The grant retires
+        # at ``cyc + max(tmr, 1)``; grants whose retirement falls past
+        # the horizon are excluded so the histogram mass equals the
+        # retired-op count exactly (the base workload invariant).
+        fut = valid_b & (st[wcs] == RESP) & (cs["nxt"][wcs] == NXT_WORK_DONE)
+        done_cyc = cyc + jnp.maximum(tmr[wcs], 1)
+        fut = fut & (done_cyc < p.cycles)
+        lat_b = done_cyc - acq_start[wcs]
+        lbkt = jnp.clip((LAT_SUB * jnp.log2(
+            lat_b.astype(jnp.float32) + 1.0)).astype(jnp.int32),
+            0, LAT_BINS - 1)
+        if dense_lat:
+            lat_hist = s["lat_hist"] + jnp.sum(
+                (lbkt[None, :] == lbins[:, None]) & fut[None, :], axis=1)
+        else:
+            lat_hist = s["lat_hist"].at[jnp.where(fut, lbkt, LAT_BINS)].add(
+                1, mode="drop")
+        lat_max = jnp.maximum(s["lat_max"],
+                              jnp.max(jnp.where(fut, lat_b, 0)))
         extra = cs["msgs"] - s["msgs"] - 2 * winner.sum()
         resp_load = winner.sum() + w_acc.sum() + extra + wake_load
         sleep_cyc = s["sleep_cyc"] + (st == SLEEP).sum()
@@ -452,16 +511,20 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                    pc=pc, bar_cnt=bar_cnt,
                    opc=opc, arr_cyc=arr_cyc, streak=streak, parked=parked,
                    resp_prev=resp_load.astype(jnp.int32),
-                   ops=ops, bank=bank,
+                   ops=ops, acq_start=acq_start, bank=bank,
                    xc={k: cs[k] for k in xc_keys},
                    msgs=cs["msgs"], polls=cs["polls"], addr_ops=addr_ops,
                    sleep_cyc=sleep_cyc, bar_cyc=bar_cyc,
+                   lat_hist=lat_hist, lat_max=lat_max,
                    active_cyc=active_cyc,
                    backoff_cyc=backoff_cyc,
                    bank_ops=bank_ops, net_stall=net_stall,
                    w_tmr=w_tmr, w_served=w_served)
-        # completion trace: which micro-op (pre-advance pc) retired where
-        ev = (jnp.where(done, s["pc"], -1).astype(jnp.int32)
+        # completion trace: which micro-op (pre-advance pc) retired where,
+        # and how long it took from first acquire issue to retirement
+        ev = (dict(step=jnp.where(done, s["pc"], -1).astype(jnp.int32),
+                   wait=jnp.where(done, cyc - s["acq_start"],
+                                  -1).astype(jnp.int32))
               if p.record_trace else None)
         return out, ev
 
@@ -474,7 +537,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     flat.update(final["bank"])
     flat.update(final["xc"])
     if p.record_trace:
-        flat["trace_step"] = trace
+        flat["trace_step"] = trace["step"]
+        flat["trace_wait"] = trace["wait"]
     return flat
 
 
@@ -483,26 +547,24 @@ def _run(p: SimParams):
     return simulate(p)
 
 
-def derive_metrics(res: Dict[str, np.ndarray], n_workers: int,
-                   cycles: int) -> Dict[str, np.ndarray]:
-    """Attach throughput/fairness/worker metrics to a raw result dict.
+def derive_metrics(res: Dict[str, np.ndarray], n_workers: int, cycles: int,
+                   energy_fit=None) -> Dict[str, np.ndarray]:
+    """Attach the paper's full metric set to a raw result dict — thin
+    alias for :func:`repro.core.metrics.attach`, the single derivation
+    layer shared with the sweep runner: throughput/worker rate, the
+    fairness family (min/max, Jain index, NaN-safe span), completion-
+    latency percentiles, and ``energy_pj_per_op`` under ``energy_fit``
+    (default: the frozen Table II calibration).
 
     Degenerate configurations (``n_workers == n_cores`` leaves no atomic
     cores; ``n_workers == 0`` has no workers) consistently report 0.0
     instead of crashing on empty slices.
     """
-    ops = res["ops"][n_workers:] if n_workers else res["ops"]
-    res["throughput"] = float(ops.sum()) / cycles if ops.size else 0.0
-    res["fairness_min"] = float(ops.min()) / cycles if ops.size else 0.0
-    res["fairness_max"] = float(ops.max()) / cycles if ops.size else 0.0
-    if n_workers:
-        w = res["w_served"][:n_workers]
-        res["worker_rate"] = (float(w.sum()) / cycles / n_workers
-                              if w.size else 0.0)
-    return res
+    return metrics_mod.attach(res, n_workers, cycles, fit=energy_fit)
 
 
-def run(p: SimParams) -> Dict[str, np.ndarray]:
+def run(p: SimParams, energy_fit=None) -> Dict[str, np.ndarray]:
     out = _run(p)
     res = {k: np.asarray(v) for k, v in out.items()}
-    return derive_metrics(res, min(p.n_workers, p.n_cores), p.cycles)
+    return derive_metrics(res, min(p.n_workers, p.n_cores), p.cycles,
+                          energy_fit=energy_fit)

@@ -132,10 +132,14 @@ def _batch_sharding():
     return NamedSharding(mesh, PartitionSpec("batch")), len(devs)
 
 
-def sweep(configs: Sequence[SimParams],
-          max_batch: Optional[int] = None) -> List[Dict[str, np.ndarray]]:
+def sweep(configs: Sequence[SimParams], max_batch: Optional[int] = None,
+          energy_fit=None) -> List[Dict[str, np.ndarray]]:
     """Run every configuration; returns one result dict per config (same
-    keys and values as ``sim.run``), in input order.
+    keys and values as ``sim.run``), in input order — including the
+    paper metric triple (``jain_fairness`` / ``lat_p95`` /
+    ``energy_pj_per_op``) attached per point by the shared derivation
+    layer (``core.metrics``).  ``energy_fit`` overrides the frozen
+    Table II calibration used for ``energy_pj_per_op``.
 
     Configurations sharing a static fingerprint are batched through one
     vmapped compile in ``max_batch``-point chunks; a heterogeneous list
@@ -163,7 +167,7 @@ def sweep(configs: Sequence[SimParams],
             res = {k: v[j] for k, v in out_np.items()}
             results[i] = derive_metrics(
                 res, min(configs[i].n_workers, configs[i].n_cores),
-                configs[i].cycles)
+                configs[i].cycles, energy_fit=energy_fit)
 
     # dispatch chunks ahead of materialization: jax computations are
     # async, so the next chunk's host-side setup (and, with >1 device,
@@ -195,11 +199,22 @@ def sweep(configs: Sequence[SimParams],
             want = chunk_cap if len(idxs) > chunk_cap else len(chunk)
             want += (-want) % ndev
             padded = chunk + [chunk[-1]] * (want - len(chunk))
+            # a worker-free chunk drops the n_workers axis so the engine
+            # statically elides the Fig.5 worker machinery (two written
+            # (n,) scan carries whose dead writes sit on a compile
+            # cliff); chunks with any workers keep the traced axis.  The
+            # dropped axis falls back to the representative's static
+            # value, so that must be pinned to 0 too — the group leader
+            # may carry workers while a later chunk is worker-free.
+            drop_workers = not any(c.n_workers for c in padded)
             dyn = {f: jnp.asarray([getattr(c, f) for c in padded], jnp.int32)
-                   for f in DYN_FIELDS}
+                   for f in DYN_FIELDS
+                   if f != "n_workers" or not drop_workers}
+            crep = dataclasses.replace(rep, n_workers=0) if drop_workers \
+                else rep
             if sharding is not None:
                 dyn = jax.device_put(dyn, sharding)
-            pending.append((part, _sweep_group(rep, dyn, len(padded))))
+            pending.append((part, _sweep_group(crep, dyn, len(padded))))
             if len(pending) >= window:
                 materialize(*pending.pop(0))
     for part, out in pending:
@@ -208,7 +223,8 @@ def sweep(configs: Sequence[SimParams],
 
 
 def sweep_grid(base: SimParams, max_batch: Optional[int] = None,
-               **axes: Sequence) -> List[Dict[str, np.ndarray]]:
+               energy_fit=None, **axes: Sequence
+               ) -> List[Dict[str, np.ndarray]]:
     """Cartesian sweep: ``sweep_grid(base, n_addrs=(1, 16), seed=(0, 1))``
     runs every combination (last axis fastest) and returns results plus a
     ``_config`` entry recording each point's SimParams."""
@@ -219,7 +235,7 @@ def sweep_grid(base: SimParams, max_batch: Optional[int] = None,
     for name, values in axes.items():
         points = [dataclasses.replace(pt, **{name: v})
                   for pt in points for v in values]
-    results = sweep(points, max_batch=max_batch)
+    results = sweep(points, max_batch=max_batch, energy_fit=energy_fit)
     for pt, res in zip(points, results):
         res["_config"] = pt
     return results

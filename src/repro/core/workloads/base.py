@@ -157,6 +157,13 @@ class Workload:
         atomics = int(np.asarray(res["opc"]).sum())
         assert int(addr_ops.sum()) == atomics, \
             f"address histogram mass {int(addr_ops.sum())} != {atomics}"
+        # the completion-latency histogram is accumulated bank-side at
+        # grant time (core.sim); its mass must still equal the retired
+        # atomic count exactly, for every protocol's grant pattern
+        if "lat_hist" in res:
+            lat_mass = int(np.asarray(res["lat_hist"]).sum())
+            assert lat_mass == atomics, \
+                f"latency histogram mass {lat_mass} != {atomics}"
         return {"atomics": atomics, "ops": int(np.asarray(res["ops"]).sum())}
 
     # ---- trace helpers for subclasses ----

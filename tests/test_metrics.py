@@ -1,0 +1,216 @@
+"""Metrics subsystem (`core.metrics`) + energy-model contract fixes.
+
+Covers: Jain-index properties, the NaN-safe fairness span (the former
+``max / max(min, 1e-9)`` span manufactured ~1e9 pseudo-values whenever a
+core starved), completion-latency percentiles against a pure-NumPy
+trace oracle (exact on the trace path, ≤ one geometric-bucket width on
+the always-on histogram path), energy threading through ``sweep()``,
+the `fit_energy` required-key validation, the BARWAIT clock-gated
+energy billing regression, and the degenerate configurations.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.metrics import (LAT_SUB, METRIC_TRIPLE, energy_stats,
+                                fairness_span, jain_fairness, json_safe,
+                                latency_percentiles)
+from repro.core.sim import SimParams, run
+from repro.core.sweep import sweep
+
+
+# ------------------------------------------------------------------ fairness
+
+def test_jain_uniform_is_one():
+    assert jain_fairness(np.full(64, 17)) == pytest.approx(1.0)
+
+
+def test_jain_monopoly_is_one_over_n():
+    for n in (4, 64, 256):
+        x = np.zeros(n)
+        x[0] = 123
+        assert jain_fairness(x) == pytest.approx(1.0 / n)
+
+
+def test_jain_degenerate_slices():
+    assert jain_fairness(np.array([])) == 0.0
+    assert jain_fairness(np.zeros(8)) == 0.0
+    assert 0.0 < jain_fairness(np.array([1, 0, 0, 1])) < 1.0
+
+
+def test_jain_scale_invariant():
+    x = np.array([3, 1, 4, 1, 5, 9])
+    assert jain_fairness(x) == pytest.approx(jain_fairness(x * 1000))
+
+
+def test_fairness_span_nan_safe():
+    assert fairness_span(np.full(8, 5)) == pytest.approx(1.0)
+    assert fairness_span(np.array([10, 5])) == pytest.approx(2.0)
+    assert fairness_span(np.array([10, 0])) == math.inf   # starved core
+    assert fairness_span(np.zeros(4)) == 0.0              # nothing ran
+    assert fairness_span(np.array([])) == 0.0
+    assert json_safe(math.inf) is None                    # report-safe
+    assert json_safe(2.0) == 2.0
+
+
+# ------------------------------------------------------------------- latency
+
+def _oracle(waits: np.ndarray, q: float) -> float:
+    """Independent inverted-CDF percentile: value at rank ceil(q*k)."""
+    s = np.sort(waits)
+    return float(s[max(int(math.ceil(q * s.size)), 1) - 1])
+
+
+@pytest.mark.parametrize("proto", ("lrsc", "colibri"))
+def test_latency_percentiles_vs_trace_oracle(proto):
+    """Trace path is exact against a pure-NumPy oracle; the always-on
+    histogram path agrees within one geometric bucket width and its max
+    is exact."""
+    kw = dict(protocol=proto, n_cores=32, n_addrs=1, cycles=2500)
+    rt = run(SimParams(record_trace=True, **kw))
+    tw = np.asarray(rt["trace_wait"])
+    waits = tw[tw >= 0]
+    assert waits.size > 0
+    assert rt["lat_p50"] == _oracle(waits, 0.50)
+    assert rt["lat_p95"] == _oracle(waits, 0.95)
+    assert rt["lat_max"] == float(waits.max())
+
+    rh = run(SimParams(**kw))                    # histogram path
+    assert rh["lat_max"] == float(waits.max())
+    assert int(np.asarray(rh["lat_hist"]).sum()) == waits.size
+    width = 2.0 ** (1.0 / (2 * LAT_SUB)) * 1.001  # half-bucket each side
+    for key, q in (("lat_p50", 0.50), ("lat_p95", 0.95)):
+        exact = _oracle(waits, q)
+        assert (exact + 1) / width <= rh[key] + 1 <= (exact + 1) * width, \
+            (key, rh[key], exact)
+
+
+def test_latency_histogram_counts_every_completion():
+    r = run(SimParams(protocol="colibri", n_cores=16, n_addrs=4, cycles=1500))
+    assert int(np.asarray(r["lat_hist"]).sum()) == int(r["opc"].sum())
+
+
+def test_latency_reflects_retry_storms():
+    """LRSC's retry/backoff loops show up in the tail: its p95 acquire
+    latency at high contention dominates polling-free Colibri's."""
+    kw = dict(n_cores=64, n_addrs=1, cycles=6000)
+    lrsc = run(SimParams(protocol="lrsc", **kw))
+    col = run(SimParams(protocol="colibri", **kw))
+    assert lrsc["lat_p95"] > col["lat_p50"]
+    assert lrsc["lat_max"] > 0 and col["lat_max"] > 0
+
+
+# -------------------------------------------------------------------- energy
+
+def test_energy_threading_through_sweep_equals_per_point():
+    """Every sweep() point's energy_pj_per_op equals calling the cost
+    model directly on that point's stat totals, for the default frozen
+    fit and for a custom fit passed through the energy_fit parameter."""
+    configs = [SimParams(protocol=p, n_cores=32, cycles=1200, n_addrs=a)
+               for p, a in (("colibri", 1), ("lrsc", 4), ("amo", 16))]
+    for cfg, res in zip(configs, sweep(configs)):
+        want = costmodel.energy_per_op(energy_stats(res),
+                                       costmodel.default_fit())
+        assert res["energy_pj_per_op"] == want
+    custom = costmodel.EnergyFit(e_msg=1.0, e_bank=2.0, e_active=0.1,
+                                 e_backoff=0.2, e_sleep=0.01, residuals={})
+    for cfg, res in zip(configs, sweep(configs, energy_fit=custom)):
+        want = costmodel.energy_per_op(energy_stats(res), custom)
+        assert res["energy_pj_per_op"] == want
+        assert res["energy_pj_per_op"] != costmodel.energy_per_op(
+            energy_stats(res), costmodel.default_fit())
+
+
+def test_fit_energy_missing_key_raises_with_name():
+    """The seed's fit_energy KeyError'd on the undocumented backoff_cyc;
+    now every required key is validated up front with a ValueError that
+    names the missing key."""
+    r = run(SimParams(protocol="colibri", n_cores=16, n_addrs=1, cycles=800))
+    good = energy_stats(r)
+    for missing in ("backoff_cyc", "bar_cyc", "ops"):
+        bad = {k: v for k, v in good.items() if k != missing}
+        with pytest.raises(ValueError, match=missing):
+            costmodel.fit_energy({"colibri": bad})
+        with pytest.raises(ValueError, match=missing):
+            costmodel.energy_per_op(bad, costmodel.default_fit())
+
+
+def test_barrier_cycles_billed_at_clock_gated_rate():
+    """Regression for the energy model dropping bar_cyc: BARWAIT cycles
+    (the clock-gated barrier wait of Glaser et al., arXiv:2004.06662)
+    are billed at the e_sleep rate, so a barrier_phases run reports
+    strictly more energy than the same stats with the barrier wait
+    zeroed — by exactly e_sleep * bar_cyc / ops."""
+    r = run(SimParams(protocol="colibri", workload="barrier_phases",
+                      n_cores=32, n_addrs=1, cycles=4000))
+    stats = energy_stats(r)
+    assert stats["bar_cyc"] > 0
+    fit = costmodel.default_fit()
+    with_bar = costmodel.energy_per_op(stats, fit)
+    without = costmodel.energy_per_op({**stats, "bar_cyc": 0.0}, fit)
+    assert with_bar > without
+    assert with_bar - without == pytest.approx(
+        fit.e_sleep * stats["bar_cyc"] / stats["ops"])
+    assert r["energy_pj_per_op"] == with_bar
+
+
+def test_frozen_fit_tracks_fresh_calibration():
+    """The frozen CALIBRATED_ENERGY constants must stay close to a fresh
+    Table II fit on the current engine (same calibration scenario at a
+    cheaper cycle count; per-op ratios are stable)."""
+    stats = {}
+    for proto in ("amo", "colibri", "lrsc", "amo_lock"):
+        kw = dict(backoff=128, backoff_exp=1) if proto == "amo_lock" else {}
+        stats[proto] = energy_stats(run(SimParams(
+            protocol=proto, n_addrs=1, cycles=6000, **kw)))
+    fresh = costmodel.fit_energy(stats)
+    frozen = costmodel.default_fit()
+    for proto in stats:
+        a = costmodel.energy_per_op(stats[proto], fresh)
+        b = costmodel.energy_per_op(stats[proto], frozen)
+        assert abs(a - b) / max(a, 1.0) < 0.25, (proto, a, b)
+
+
+# ---------------------------------------------------------------- degenerate
+
+def test_all_workers_degenerate_reports_zero_triple():
+    """n_workers == n_cores leaves no atomic cores: the whole metric
+    family reports 0.0 instead of crashing on empty slices."""
+    r = run(SimParams(protocol="colibri", n_cores=8, n_workers=8, n_addrs=1,
+                      cycles=500))
+    assert r["throughput"] == 0.0
+    assert r["jain_fairness"] == 0.0
+    assert r["fairness_span"] == 0.0
+    assert r["lat_p50"] == 0.0 and r["lat_p95"] == 0.0 and r["lat_max"] == 0.0
+    assert r["energy_pj_per_op"] == 0.0
+    assert r["worker_rate"] > 0.0
+
+
+def test_latency_percentiles_empty_inputs():
+    out = latency_percentiles({"lat_hist": np.zeros(8, np.int64),
+                               "lat_max": np.int32(0)})
+    assert out == {"lat_p50": 0.0, "lat_p95": 0.0, "lat_max": 0.0}
+    out = latency_percentiles({"trace_wait": np.full((5, 3), -1),
+                               "lat_max": np.int32(0)})
+    assert out["lat_p95"] == 0.0
+
+
+def test_metric_triple_always_present():
+    """Every run()/sweep() result carries the paper's metric triple —
+    with and without workers, traces, and across workloads."""
+    cfgs = [
+        SimParams(protocol="colibri", n_cores=16, n_addrs=1, cycles=600),
+        SimParams(protocol="lrsc", n_cores=16, n_addrs=1, cycles=600,
+                  n_workers=4, record_trace=True),
+        SimParams(protocol="mwait_lock", workload="ms_queue", n_cores=16,
+                  n_addrs=2, cycles=600),
+    ]
+    for cfg in cfgs:
+        r = run(cfg)
+        for k in METRIC_TRIPLE:
+            assert k in r, (cfg.protocol, k)
+    for r in sweep(cfgs):
+        for k in METRIC_TRIPLE:
+            assert k in r, k

@@ -1,0 +1,52 @@
+"""Schema check for generated benchmark reports: every summary row must
+carry the paper's full metric triple (jain_fairness / lat_p95 /
+energy_pj_per_op) and the trend flags must hold.
+
+CI regenerates ``reports/benchmarks.summary.json`` (``run.py --only
+summary`` under ``REPRO_BENCH_QUICK=1``) and then runs this module, so
+the committed full-resolution report and the CI smoke report are held
+to the same schema.  Skips when no summary report has been generated.
+"""
+import json
+import math
+import os
+
+import pytest
+
+from repro.core.metrics import METRIC_TRIPLE
+
+REPORT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "reports", "benchmarks.summary.json")
+
+
+@pytest.fixture(scope="module")
+def summary():
+    if not os.path.exists(REPORT):
+        pytest.skip(f"no summary report at {REPORT}; generate with "
+                    "`benchmarks/run.py --only summary`")
+    with open(REPORT) as f:
+        return json.load(f)["summary"]
+
+
+def test_every_summary_row_carries_metric_triple(summary):
+    rows = summary["rows"]
+    assert rows, "summary report has no rows"
+    for row in rows:
+        for k in METRIC_TRIPLE:
+            assert k in row, (row.get("workload"), row.get("protocol"), k)
+            assert isinstance(row[k], (int, float)), (k, row[k])
+            assert math.isfinite(row[k]) and row[k] >= 0.0, (k, row[k])
+        assert 0.0 <= row["jain_fairness"] <= 1.0 + 1e-9
+        # fairness_span is the one legitimately-absent value (None once
+        # a core starves — never an epsilon-divided pseudo-number); 0.0
+        # marks the nothing-completed degenerate case
+        assert "fairness_span" in row
+        assert (row["fairness_span"] is None or row["fairness_span"] == 0.0
+                or row["fairness_span"] >= 1.0)
+
+
+def test_summary_trend_flags_hold(summary):
+    head = summary["headline"]
+    assert head["pollfree_energy_wins_256"] == 1.0
+    assert head["colibri_fair_and_fast_256"] == 1.0
+    assert head["min_lrsc_over_colibri_energy_256"] > 1.0

@@ -79,13 +79,14 @@ def test_interference_fig5():
 
 
 def test_queue_fairness_fig6():
-    """Fig. 6: Colibri distributes ops evenly; LRSC has wide min/max span."""
+    """Fig. 6: Colibri distributes ops evenly; LRSC concentrates them.
+    Jain's index is the primary metric (bounded, meaningful even when a
+    core starves); the NaN-safe span backs the same claim."""
     r_col = run(SimParams(protocol="colibri", n_addrs=2, cycles=CYCLES))
     r_lrsc = run(SimParams(protocol="lrsc", n_addrs=2, cycles=CYCLES))
-    col_span = r_col["fairness_max"] / max(r_col["fairness_min"], 1e-9)
-    lrsc_span = r_lrsc["fairness_max"] / max(r_lrsc["fairness_min"], 1e-9)
-    assert col_span < lrsc_span
-    assert col_span < 3.0
+    assert r_col["jain_fairness"] > r_lrsc["jain_fairness"]
+    assert r_col["jain_fairness"] > 0.9
+    assert r_col["fairness_span"] < 3.0          # finite: nobody starved
 
 
 def test_queue_throughput_scaling_fig6():
@@ -123,13 +124,11 @@ def test_colibri_area_scales_linearly():
 
 
 def test_energy_model_table2():
+    from repro.core.metrics import energy_stats
     stats = {}
     for proto in ("amo", "colibri", "lrsc", "amo_lock"):
         r = run(SimParams(protocol=proto, n_addrs=1, cycles=CYCLES))
-        stats[proto] = {k: float(r[k]) for k in
-                        ("msgs", "bank_ops", "active_cyc", "sleep_cyc",
-                         "backoff_cyc")}
-        stats[proto]["ops"] = float(r["ops"].sum())
+        stats[proto] = energy_stats(r)
     fit = fit_energy(stats)
     for proto, target in PAPER_ENERGY.items():
         model = energy_per_op(stats[proto], fit)

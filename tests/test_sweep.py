@@ -12,7 +12,11 @@ from repro.core.sweep import STATIC_FIELDS, sweep, sweep_grid
 
 EXACT_KEYS = ("ops", "msgs", "polls", "sleep_cyc", "backoff_cyc",
               "bank_ops", "net_stall", "throughput", "fairness_min",
-              "fairness_max")
+              "fairness_max",
+              # the metrics layer derives these from the same integer
+              # state, so sweep and run agree exactly, not approximately
+              "lat_hist", "lat_max", "lat_p50", "lat_p95",
+              "jain_fairness", "fairness_span", "energy_pj_per_op")
 
 
 def _assert_same(swept, ref):
@@ -68,6 +72,23 @@ def test_sweep_rejects_non_sweepable_axis():
 def test_sweep_rejects_bad_max_batch():
     with pytest.raises(ValueError):
         sweep([SimParams(n_cores=8, cycles=100)], max_batch=0)
+
+
+def test_sweep_mixed_worker_axis_chunks_identical():
+    """A fingerprint group mixing worker and worker-free configs stays
+    bit-identical to run() even when chunking isolates a worker-free
+    chunk: the dropped n_workers axis must not fall back to the group
+    leader's nonzero static value (phantom Fig.5 workers)."""
+    configs = [
+        SimParams(protocol="colibri", n_cores=16, n_addrs=1, cycles=500,
+                  n_workers=w) for w in (8, 0, 4)
+    ]
+    for mb in (None, 1):
+        for cfg, swept in zip(configs, sweep(configs, max_batch=mb)):
+            ref = run(cfg)
+            _assert_same(swept, ref)
+            assert np.array_equal(np.asarray(swept["w_served"]),
+                                  np.asarray(ref["w_served"]))
 
 
 def test_sweep_chunking_identical():
