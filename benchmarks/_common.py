@@ -1,0 +1,57 @@
+"""Shared benchmark plumbing: QUICK mode, timing, row emission.
+
+Every benchmark module used to re-implement three things ad hoc: a
+``QUICK = int(os.environ.get("REPRO_BENCH_QUICK", ...))`` switch, a
+warm-then-best-of ``_time`` helper, and hand-built JSON-safe row dicts.
+They live here once; row building itself is
+``repro.sync.Result.to_row()``.
+
+``REPRO_BENCH_QUICK=1`` (the CI smoke rows) selects each benchmark's
+trimmed configuration via :func:`pick`; the full-resolution path is
+byte-for-byte what it always was.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, TypeVar
+
+T = TypeVar("T")
+
+#: CI smoke mode — trimmed grids/horizons so every benchmark stays cheap
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+
+
+def pick(full: T, quick: T) -> T:
+    """``quick`` under ``REPRO_BENCH_QUICK=1``, else ``full``."""
+    return quick if QUICK else full
+
+
+def time_best(fn: Callable[[], object], reps: int = 3) -> float:
+    """Best-of-``reps`` wall seconds for ``fn()``, after one untimed
+    warm call (compile excluded — what repeated benchmark runs measure
+    once the persistent compilation cache is warm)."""
+    fn()
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    """(result, seconds_per_call) with block_until_ready semantics."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -4,26 +4,28 @@ Per-event energies fit once against the paper's column (calibration), then
 the model is evaluated per protocol; residuals reported. Also derives the
 headline efficiency ratios (7.1× vs LRSC, 8.8× vs locks) and checks the
 frozen calibration (``costmodel.CALIBRATED_ENERGY`` — the fit every
-``run()``/``sweep()`` uses for ``energy_pj_per_op``) against the fresh
-fit, so drift between the engine and the frozen constants is visible in
-every benchmark run.  Stats go through ``metrics.energy_stats`` so the
-fit sees the full required-key contract (including ``bar_cyc``)."""
+simulation uses for ``energy_pj_per_op``) against the fresh fit, so
+drift between the engine and the frozen constants is visible in every
+benchmark run.  Stats come from ``repro.sync`` Results
+(``Result.energy_stats``), so the fit sees the full required-key
+contract (including ``bar_cyc``)."""
 from __future__ import annotations
 
 from typing import Dict, List
 
+from benchmarks._common import pick
 from repro.core.costmodel import (PAPER_ENERGY, default_fit, energy_per_op,
                                   fit_energy)
-from repro.core.metrics import energy_stats
-from repro.core.sim import SimParams, run
+from repro.sync import Spec, run
 
-CYCLES = 12_000
+CYCLES = pick(12_000, 1_500)
 
 
 def _stats():
-    return {proto: energy_stats(run(SimParams(
+    return {proto: run(Spec(
         protocol=proto, n_addrs=1, cycles=CYCLES,
-        **(dict(backoff=128, backoff_exp=1) if proto == "amo_lock" else {}))))
+        **(dict(backoff=128, backoff_exp=1) if proto == "amo_lock"
+           else {}))).energy_stats()
         for proto in ("amo", "colibri", "lrsc", "amo_lock")}
 
 

@@ -4,16 +4,17 @@ points/second, tracked against the pre-overhaul baseline.
 Three measurements, all warm (compile excluded — the persistent
 compilation cache makes repeated benchmark runs skip compiles anyway):
 
-* **engine** — one ``sim.run`` at 64 / 256 / 1024 cores, 20k cycles,
-  reported as simulated core-cycles per wall-second.  The 1024-core row
-  is the run the argsort-arbitration engine made impractical; the
-  headline checks it now completes under the old 256-core wall budget.
+* **engine** — one single-point ``repro.sync.run`` at 64 / 256 / 1024
+  cores, 20k cycles, reported as simulated core-cycles per wall-second.
+  The 1024-core row is the run the argsort-arbitration engine made
+  impractical; the headline checks it now completes under the old
+  256-core wall budget.
 * **unroll ablation** — the 256-core run at ``unroll`` 1 / 4 / 8
   (EXPERIMENTS.md §Engine-throughput quotes the table).
-* **grid256** — the ``workloads_grid`` sweep (5 workloads × 5 protocols
-  × 2 seeds) at 256 cores through ``core.sweep.sweep``, reported as
-  points per second.  The acceptance bar for the hot-path overhaul is
-  ≥2× against ``PRE_PR`` here.
+* **grid256** — the ``workloads_grid`` study (5 workloads × 5 protocols
+  × 2 seeds) at 256 cores through ``Study.run()``, reported as points
+  per second.  The acceptance bar for the hot-path overhaul is ≥2×
+  against ``PRE_PR`` here.
 
 ``PRE_PR`` holds the baseline measured at commit e6a3f48 (per-cycle
 ``jnp.argsort`` acceptance, fused int32 FIFO key, no unroll, per-key
@@ -26,25 +27,22 @@ the ratio so future PRs have a perf trajectory to compare against.
 """
 from __future__ import annotations
 
-import os
-import time
 from typing import Dict, List
 
-from repro.core.sim import SimParams, run
-from repro.core.sweep import sweep
+from benchmarks._common import pick, time_best
+from repro.sync import Spec, Study, run
 
-QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
-
-ENGINE_CYCLES = 2_000 if QUICK else 20_000
-ENGINE_CORES = (64, 256) if QUICK else (64, 256, 1024)
-UNROLLS = () if QUICK else (2, 4, 8)       # default unroll=1 is the
-GRID_CYCLES = 1_000 if QUICK else 3_000    # engine_256c row itself
-GRID_WORKLOADS = (("rmw_loop", "ms_queue") if QUICK else
-                  ("rmw_loop", "ms_queue", "treiber_stack",
-                   "zipf_histogram", "barrier_phases"))
-GRID_PROTOS = (("colibri", "lrsc") if QUICK else
-               ("colibri", "lrscwait", "mwait_lock", "lrsc", "amo_lock"))
-GRID_SEEDS = (0,) if QUICK else (0, 1)
+ENGINE_CYCLES = pick(20_000, 2_000)
+ENGINE_CORES = pick((64, 256, 1024), (64, 256))
+UNROLLS = pick((2, 4, 8), ())              # default unroll=1 is the
+GRID_CYCLES = pick(3_000, 1_000)           # engine_256c row itself
+GRID_WORKLOADS = pick(("rmw_loop", "ms_queue", "treiber_stack",
+                       "zipf_histogram", "barrier_phases"),
+                      ("rmw_loop", "ms_queue"))
+GRID_PROTOS = pick(("colibri", "lrscwait", "mwait_lock", "lrsc",
+                    "amo_lock"),
+                   ("colibri", "lrsc"))
+GRID_SEEDS = pick((0, 1), (0,))
 
 #: pre-overhaul baseline (commit e6a3f48), measured with this module's
 #: exact protocol on the reference box.  Keys match the row labels.
@@ -58,46 +56,37 @@ PRE_PR = {
 }
 
 
-def _time(fn, reps: int = 3) -> float:
-    fn()                                        # warm / compile
-    best = float("inf")
-    for _ in range(max(reps, 1)):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def _grid_configs() -> List[SimParams]:
+def _grid_study() -> Study:
     from benchmarks.bench_workloads import _scenario
-    return [SimParams(protocol=proto, workload=wl, n_cores=256,
-                      cycles=GRID_CYCLES, seed=seed, **_scenario(wl))
-            for wl in GRID_WORKLOADS for proto in GRID_PROTOS
-            for seed in GRID_SEEDS]
+    return Study.from_specs(
+        Spec(protocol=proto, workload=wl, n_cores=256,
+             cycles=GRID_CYCLES, seed=seed, **_scenario(wl))
+        for wl in GRID_WORKLOADS for proto in GRID_PROTOS
+        for seed in GRID_SEEDS)
 
 
 def rows() -> List[Dict]:
     out: List[Dict] = []
     for n in ENGINE_CORES:
-        p = SimParams(protocol="colibri", n_cores=n, cycles=ENGINE_CYCLES)
-        dt = _time(lambda: run(p), reps=1 if n >= 1024 else 3)
+        s = Spec(protocol="colibri", n_cores=n, cycles=ENGINE_CYCLES)
+        dt = time_best(lambda: run(s), reps=1 if n >= 1024 else 3)
         label = f"engine_{n}c"
         out.append({"figure": "engine", "row": label, "n_cores": n,
                     "cycles": ENGINE_CYCLES, "wall_s": dt,
                     "core_cycles_per_s": n * ENGINE_CYCLES / dt,
                     "pre_pr_core_cycles_per_s": PRE_PR.get(label)})
     for u in UNROLLS:
-        p = SimParams(protocol="colibri", n_cores=256, cycles=ENGINE_CYCLES,
-                      unroll=u)
-        dt = _time(lambda: run(p))
+        s = Spec(protocol="colibri", n_cores=256, cycles=ENGINE_CYCLES,
+                 unroll=u)
+        dt = time_best(lambda: run(s))
         out.append({"figure": "engine", "row": f"unroll_{u}", "n_cores": 256,
                     "cycles": ENGINE_CYCLES, "wall_s": dt,
                     "core_cycles_per_s": 256 * ENGINE_CYCLES / dt})
-    cfgs = _grid_configs()
-    dt = _time(lambda: sweep(cfgs), reps=1)
-    out.append({"figure": "engine", "row": "grid256", "n_points": len(cfgs),
+    study = _grid_study()
+    dt = time_best(lambda: study.run(), reps=1)
+    out.append({"figure": "engine", "row": "grid256", "n_points": len(study),
                 "cycles": GRID_CYCLES, "wall_s": dt,
-                "points_per_s": len(cfgs) / dt,
+                "points_per_s": len(study) / dt,
                 "pre_pr_points_per_s": PRE_PR["grid256_points_per_s"]})
     return out
 
@@ -117,7 +106,7 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
             e1024["wall_s"] <= PRE_PR["engine_256c_wall_s"])
     grid = by["grid256"]
     head["grid256_points_per_s"] = grid["points_per_s"]
-    if not QUICK:
+    if "engine_1024c" in by:                    # full (non-QUICK) pass
         head["grid256_speedup_vs_pre_pr"] = (
             grid["points_per_s"] / PRE_PR["grid256_points_per_s"])
     for u in UNROLLS:

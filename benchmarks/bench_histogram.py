@@ -15,49 +15,44 @@ experience.  The paper's claims validated here (EXPERIMENTS.md §Fig3):
     stream; §Workloads records the small shift vs. the seed's
     hash-modulo stream).
 
-The contention axis runs through ``core.sweep``: one engine compile per
-protocol covers all bin counts *and* both skew settings (the zipf skew
-is a traced axis too).
+The whole figure is one ``repro.sync.Study`` over an explicit labelled
+spec list: one engine compile per protocol covers all bin counts *and*
+both skew settings (the zipf skew is a traced axis).
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.sim import SimParams
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study
 
 BINS = (1, 4, 16, 64, 256, 1024)
 PROTOS = ("amo", "lrsc", "lrscwait", "colibri")
-CYCLES = 12_000
+CYCLES = pick(12_000, 1_500)
 WL = dict(workload="zipf_histogram", zipf_skew=0)    # uniform limit
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    labelled = [(proto, SimParams(protocol=proto, n_addrs=bins,
-                                  cycles=cycles, **WL))
+    labelled = [(proto, Spec(protocol=proto, n_addrs=bins,
+                             cycles=cycles, **WL))
                 for proto in PROTOS for bins in BINS]
     # LRSCwait_q = 8 line (capacity collapse)
-    labelled += [("lrscwait_q8", SimParams(protocol="lrscwait", q_slots=8,
-                                           n_addrs=bins, cycles=cycles,
-                                           **WL))
+    labelled += [("lrscwait_q8", Spec(protocol={"name": "lrscwait",
+                                                "q_slots": 8},
+                                      n_addrs=bins, cycles=cycles, **WL))
                  for bins in BINS]
     # skewed companion lines: same compile, traced zipf_skew axis
     labelled += [(f"{proto}_zipf1.5",
-                  SimParams(protocol=proto, n_addrs=bins, cycles=cycles,
-                            workload="zipf_histogram", zipf_skew=150))
+                  Spec(protocol=proto, n_addrs=bins, cycles=cycles,
+                       workload="zipf_histogram", zipf_skew=150))
                  for proto in ("colibri", "lrsc") for bins in BINS]
-    labels, configs = zip(*labelled)
-    out = []
-    for label, p, r in zip(labels, configs, sweep(configs)):
-        out.append({"figure": "fig3", "protocol": label, "bins": p.n_addrs,
-                    "updates_per_cycle": r["throughput"],
-                    "polls": int(r["polls"]),
-                    "msgs": int(r["msgs"]),
-                    "sleep_cyc": int(r["sleep_cyc"]),
-                    "jain_fairness": r["jain_fairness"],
-                    "lat_p95": r["lat_p95"],
-                    "energy_pj_per_op": r["energy_pj_per_op"]})
-    return out
+    labels = [lb for lb, _ in labelled]
+    study = Study.from_specs(s for _, s in labelled)
+    return [r.to_row(figure="fig3", protocol=label,
+                     bins=r.spec.topology.n_addrs,
+                     updates_per_cycle=r.throughput,
+                     sleep_cyc=int(r["sleep_cyc"]))
+            for label, r in zip(labels, study.run())]
 
 
 def headline(rs: List[Dict]) -> Dict[str, float]:

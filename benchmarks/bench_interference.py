@@ -5,41 +5,38 @@
 Claims: Colibri pollers leave workers unaffected (≈1.0); LRSC pollers crush
 them (paper 0.26; our machine model 0.33 at 252:4).
 
-The worker-split axis runs through ``core.sweep``: per protocol, the four
-256-core contended runs share one compile (``n_workers`` is a traced
-axis); only the isolated baselines compile per core count.
+One ``repro.sync.Study`` over contended + isolated points: per
+protocol, the four 256-core contended runs share one compile
+(``n_workers`` is a traced axis); only the isolated baselines compile
+per core count.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.sim import SimParams
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study
 
 SPLITS = (4, 16, 64, 128)                 # workers; pollers = 256 - workers
 PROTOS = ("amo", "lrsc", "colibri", "lrscwait")
-CYCLES = 8_000
+CYCLES = pick(8_000, 1_500)
 NET = dict(net_bw=13, hol_block=16, backoff=128, backoff_exp=1)
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    contended = [SimParams(protocol=proto, n_addrs=1, n_workers=w,
-                           cycles=cycles, **NET)
+    contended = [Spec(protocol=proto, n_addrs=1, n_workers=w,
+                      cycles=cycles, **NET)
                  for proto in PROTOS for w in SPLITS]
-    isolated = [SimParams(protocol=proto, n_addrs=1, n_cores=w, n_workers=w,
-                          cycles=cycles, **NET)
+    isolated = [Spec(protocol=proto, n_addrs=1, n_cores=w, n_workers=w,
+                     cycles=cycles, **NET)
                 for proto in PROTOS for w in SPLITS]
-    res = sweep(contended + isolated)
+    res = Study.from_specs(contended + isolated).run()
     out = []
-    for i, p in enumerate(contended):
-        r, base = res[i], res[len(contended) + i]
-        rel = r["worker_rate"] / max(base["worker_rate"], 1e-9)
-        out.append({"figure": "fig5", "protocol": p.protocol,
-                    "pollers": 256 - p.n_workers, "workers": p.n_workers,
-                    "relative_worker_perf": rel,
-                    "jain_fairness": r["jain_fairness"],
-                    "lat_p95": r["lat_p95"],
-                    "energy_pj_per_op": r["energy_pj_per_op"]})
+    for r, base in zip(res[:len(contended)], res[len(contended):]):
+        w = r.spec.workload.n_workers
+        rel = r.worker_rate / max(base.worker_rate, 1e-9)
+        out.append(r.to_row(figure="fig5", pollers=256 - w, workers=w,
+                            relative_worker_perf=rel))
     return out
 
 

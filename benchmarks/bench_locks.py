@@ -7,43 +7,34 @@ collapse at high contention; waiting-based locks worst at LOW contention
 (management overhead).  ``ticket_lock`` sits between: polling like
 ``amo_lock`` but with FIFO fairness, paying serialized ticket handoffs.
 
-The contention axis runs through ``core.sweep`` (one compile per lock).
+One ``repro.sync.Study`` per figure (one compile per lock); rows come
+from ``Result.to_row`` — ``jain_fairness`` is the primary fairness
+metric (the former ``max/max(min, 1e-9)`` span exploded to ~1e9
+whenever a spin lock starved a core), with the NaN-safe span riding
+along as ``None`` once any core starves.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core.metrics import json_safe
-from repro.core.sim import SimParams
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study
 
 BINS = (1, 4, 16, 64, 256, 1024)
 LOCKS = ("colibri", "amo_lock", "lrsc_lock", "ticket_lock", "mwait_lock")
-CYCLES = 12_000
+CYCLES = pick(12_000, 1_500)
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    configs = []
+    specs = []
     for proto in LOCKS:
         kw = dict(backoff=128, backoff_exp=1) if proto.endswith("lock") \
             else {}
-        configs += [SimParams(protocol=proto, n_addrs=bins, cycles=cycles,
-                              **kw) for bins in BINS]
-    out = []
-    for p, r in zip(configs, sweep(configs)):
-        # jain_fairness is the primary fairness metric: the former
-        # max/max(min, 1e-9) span exploded to ~1e9 whenever a spin lock
-        # starved a core to 0 ops; the NaN-safe span (None once any core
-        # starves) rides along for the min/max view.
-        out.append({"figure": "fig4", "protocol": p.protocol,
-                    "bins": p.n_addrs,
-                    "updates_per_cycle": r["throughput"],
-                    "polls": int(r["polls"]),
-                    "jain_fairness": r["jain_fairness"],
-                    "fairness_span": json_safe(r["fairness_span"]),
-                    "lat_p95": r["lat_p95"],
-                    "energy_pj_per_op": r["energy_pj_per_op"]})
-    return out
+        specs += [Spec(protocol=proto, n_addrs=bins, cycles=cycles, **kw)
+                  for bins in BINS]
+    return [r.to_row(figure="fig4", bins=r.spec.topology.n_addrs,
+                     updates_per_cycle=r.throughput)
+            for r in Study.from_specs(specs).run()]
 
 
 def headline(rs: List[Dict]) -> Dict[str, float]:

@@ -13,41 +13,32 @@ enqueue+dequeue pair of the two-atomic program rather than the former
 single-RMW approximation — per-op throughput roughly halves and the
 headline ratios shift (EXPERIMENTS.md §Workloads records the deltas).
 
-Configs run through ``core.sweep`` — the core-count axis changes array
-shapes so each (protocol, cores) point still compiles separately, but
-the shared runner keeps the API uniform and batches any same-shape
-points.
+One ``repro.sync.Study`` — the core-count axis changes array shapes so
+each (protocol, cores) point still compiles separately, but the shared
+runner keeps the API uniform and batches any same-shape points.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import workloads
-from repro.core.sim import SimParams
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study, scenario
 
 CORES = (2, 8, 32, 64, 128, 256)
 PROTOS = ("colibri", "colibri_hier", "lrsc", "amo_lock")
-CYCLES = 10_000
-KW = dict(backoff=128, backoff_exp=1, **workloads.get("ms_queue").scenario)
+CYCLES = pick(10_000, 1_500)
+KW = dict(backoff=128, backoff_exp=1, **scenario("ms_queue"))
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    configs = [SimParams(protocol=proto, workload="ms_queue", n_cores=n,
-                         cycles=cycles, **KW)
-               for proto in PROTOS for n in CORES]
-    out = []
-    for p, r in zip(configs, sweep(configs)):
-        out.append({"figure": "fig6", "protocol": p.protocol,
-                    "cores": p.n_cores,
-                    "ops_per_cycle": r["throughput"],
-                    "atomics_per_cycle": float(r["opc"].sum()) / p.cycles,
-                    "slowest_core": r["fairness_min"],
-                    "fastest_core": r["fairness_max"],
-                    "jain_fairness": r["jain_fairness"],
-                    "lat_p95": r["lat_p95"],
-                    "energy_pj_per_op": r["energy_pj_per_op"]})
-    return out
+    study = Study(Spec(workload="ms_queue", cycles=cycles, **KW)) \
+        .grid(protocol=PROTOS, n_cores=CORES)
+    return [r.to_row(figure="fig6",
+                     ops_per_cycle=r.throughput,
+                     atomics_per_cycle=r.atomics_per_cycle,
+                     slowest_core=r.fairness_min,
+                     fastest_core=r.fairness_max)
+            for r in study.run()]
 
 
 def headline(rs: List[Dict]) -> Dict[str, float]:

@@ -11,7 +11,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timed
+from benchmarks._common import timed
 from repro.core import dispatch as D
 
 T = 1 << 18

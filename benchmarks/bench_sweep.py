@@ -1,9 +1,10 @@
-"""Sweep-runner speedup: vmapped grid vs. sequential per-config ``run``.
+"""Sweep-runner speedup: one batched ``Study.run()`` vs. sequential
+per-point ``repro.sync.run``.
 
-The acceptance bar for the protocol-plugin refactor: a ≥8-point sweep
-through ``core.sweep`` must beat the equivalent sequential per-config
-``sim.run`` loop (the seed pattern re-jits the engine at every grid
-point; the sweep compiles once per static fingerprint and batches the
+The acceptance bar for the protocol-plugin refactor: a ≥8-point study
+through the vmapped sweep runner must beat the equivalent sequential
+per-point loop (the seed pattern re-jits the engine at every grid
+point; the study compiles once per static fingerprint and batches the
 rest through ``jax.vmap``).  Numbers land in EXPERIMENTS.md §Sweep.
 
 Both paths are explicitly warmed (one untimed call each) before the
@@ -20,10 +21,10 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.sim import SimParams, run
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study, run
 
-CYCLES = 6_000
+CYCLES = pick(6_000, 1_000)
 GRID = [dict(n_addrs=a, lat=l, work=w, seed=s)
         for a, l, w, s in [(1, 5, 10, 0), (4, 5, 10, 1), (16, 5, 10, 2),
                            (64, 5, 10, 3), (1, 3, 6, 4), (16, 3, 6, 5),
@@ -32,28 +33,29 @@ GRID = [dict(n_addrs=a, lat=l, work=w, seed=s)
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    configs = [SimParams(protocol="colibri", n_cores=128, cycles=cycles,
-                         **g) for g in GRID]
+    study = Study.from_specs(
+        Spec(protocol="colibri", n_cores=128, cycles=cycles, **g)
+        for g in GRID)
+    specs = study.specs()
     # warm both jit caches so neither timed pass pays a compile
-    sweep(configs)
-    for c in configs:
-        run(c)
+    study.run()
+    for s in specs:
+        run(s)
     t0 = time.perf_counter()
-    swept = sweep(configs)
+    swept = study.run()
     t_sweep = time.perf_counter() - t0
     t0 = time.perf_counter()
-    seq = [run(c) for c in configs]
+    seq = [run(s) for s in specs]
     t_seq = time.perf_counter() - t0
     out = []
-    for p, rs, rq in zip(configs, swept, seq):
-        out.append({"figure": "sweep", "n_addrs": p.n_addrs, "lat": p.lat,
-                    "work": p.work, "seed": p.seed,
-                    "updates_per_cycle": rs["throughput"],
-                    "matches_run": bool(
-                        np.array_equal(rs["ops"], rq["ops"])
-                        and int(rs["msgs"]) == int(rq["msgs"])
-                        and int(rs["polls"]) == int(rq["polls"]))})
-    out.append({"figure": "sweep", "timing": True, "n_configs": len(configs),
+    for g, rs, rq in zip(GRID, swept, seq):
+        out.append(rs.to_row(figure="sweep", **g,
+                             updates_per_cycle=rs.throughput,
+                             matches_run=bool(
+                                 np.array_equal(rs["ops"], rq["ops"])
+                                 and rs.msgs == rq.msgs
+                                 and rs.polls == rq.polls)))
+    out.append({"figure": "sweep", "timing": True, "n_configs": len(specs),
                 "sweep_s": t_sweep, "sequential_s": t_seq,
                 "speedup": t_seq / t_sweep})
     return out

@@ -1,5 +1,5 @@
 """Workload × protocol grid — every concurrent-algorithm program against
-every synchronization protocol, through one vmapped sweep call.
+every synchronization protocol, through one ``repro.sync.Study``.
 
 This is the scenario-diversity benchmark the paper's headline claim
 ("various concurrent algorithms with high and low contention") actually
@@ -21,14 +21,15 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import workloads
-from repro.core.sim import SimParams
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study, scenario
 
 WORKLOADS = ("rmw_loop", "ms_queue", "treiber_stack", "zipf_histogram",
              "barrier_phases")
 PROTOS = ("colibri", "lrscwait", "mwait_lock", "lrsc", "amo_lock")
-CYCLES = 6_000
+# quick horizon stays >= 2.5k: below that the 64-core colibri queue has
+# not wrapped treiber_stack's push+pop program once and ratios read 0
+CYCLES = pick(6_000, 2_500)
 N_CORES = 64
 SEEDS = (0, 1)
 #: scenario knobs come from each workload's canonical ``scenario``;
@@ -38,41 +39,41 @@ ZIPF_LADDER = (0, 100, 200)
 
 
 def _scenario(wl: str) -> dict:
-    return {**workloads.get(wl).scenario, **OVERRIDES.get(wl, {})}
+    return {**scenario(wl), **OVERRIDES.get(wl, {})}
 
 
 def rows(cycles: int = CYCLES) -> List[Dict]:
     labelled = [
-        (wl, proto, SimParams(protocol=proto, workload=wl, n_cores=N_CORES,
-                              cycles=cycles, seed=seed, **_scenario(wl)))
+        (wl, proto, Spec(protocol=proto, workload=wl, n_cores=N_CORES,
+                         cycles=cycles, seed=seed, **_scenario(wl)))
         for wl in WORKLOADS for proto in PROTOS for seed in SEEDS
     ]
     # Zipf skew ladder rides the same colibri/lrsc static groups as the
     # grid rows — the traced zipf_skew axis adds no compiles.
     labelled += [
         (f"zipf_s{skew/100:.1f}", proto,
-         SimParams(protocol=proto, workload="zipf_histogram",
-                   n_cores=N_CORES, cycles=cycles,
-                   **{**_scenario("zipf_histogram"), "zipf_skew": skew}))
+         Spec(protocol=proto, workload="zipf_histogram",
+              n_cores=N_CORES, cycles=cycles,
+              **{**_scenario("zipf_histogram"), "zipf_skew": skew}))
         for proto in ("colibri", "lrsc") for skew in ZIPF_LADDER
     ]
-    configs = [c for _, _, c in labelled]
+    study = Study.from_specs(s for _, _, s in labelled)
     out: List[Dict] = []
     acc: Dict[tuple, Dict] = {}
-    for (wl, proto, p), r in zip(labelled, sweep(configs)):
+    for (wl, proto, s), r in zip(labelled, study.run()):
         row = acc.setdefault((wl, proto), {
             "figure": "workload_grid", "workload": wl, "protocol": proto,
-            "cores": p.n_cores, "ops_per_cycle": 0.0,
+            "cores": s.topology.n_cores, "ops_per_cycle": 0.0,
             "atomics_per_cycle": 0.0, "polls": 0, "msgs": 0,
             "jain_fairness": 0.0, "lat_p95": 0.0,
             "energy_pj_per_op": 0.0, "n": 0})
-        row["ops_per_cycle"] += r["throughput"]
-        row["atomics_per_cycle"] += float(r["opc"].sum()) / p.cycles
-        row["polls"] += int(r["polls"])
-        row["msgs"] += int(r["msgs"])
-        row["jain_fairness"] += r["jain_fairness"]
-        row["lat_p95"] += r["lat_p95"]
-        row["energy_pj_per_op"] += r["energy_pj_per_op"]
+        row["ops_per_cycle"] += r.throughput
+        row["atomics_per_cycle"] += r.atomics_per_cycle
+        row["polls"] += r.polls
+        row["msgs"] += r.msgs
+        row["jain_fairness"] += r.jain_fairness
+        row["lat_p95"] += r.lat_p95
+        row["energy_pj_per_op"] += r.energy_pj_per_op
         row["n"] += 1
     for row in acc.values():                     # mean over seeds
         for k in ("ops_per_cycle", "atomics_per_cycle", "jain_fairness",

@@ -15,27 +15,27 @@ asserts the paper's cross-cutting trends so CI catches regressions:
     index instead of a min/max span that explodes when a core starves);
   * **throughput** — Colibri ≥ LRSC at 256 cores on every workload.
 
+The grid runs as one streaming ``repro.sync.Study`` — rows are built
+from each :class:`Result` as its sweep chunk materializes (the spec on
+every result identifies its point, so chunk-completion order is fine),
+instead of waiting on the whole protocol × workload × cores product.
+
 ``run.py --only summary`` → ``reports/benchmarks.summary.json``.
 ``REPRO_BENCH_QUICK=1`` (the CI smoke row) trims to one workload, the
 five headline protocols and the 64/256-core points.
 """
 from __future__ import annotations
 
-import os
 from typing import Dict, List
 
-from repro.core import protocols, workloads
-from repro.core.metrics import json_safe
-from repro.core.sim import SimParams
-from repro.core.sweep import sweep
+from benchmarks._common import pick
+from repro.sync import Spec, Study, protocols, scenario, workloads
 
-QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
-
-CORES = (64, 256) if QUICK else (8, 64, 256)
-PROTOS = (("colibri", "lrscwait", "mwait_lock", "lrsc", "amo_lock")
-          if QUICK else tuple(sorted(protocols.names())))
-WORKLOADS = ("rmw_loop",) if QUICK else tuple(sorted(workloads.names()))
-CYCLES = 2_000 if QUICK else 6_000
+CORES = pick((8, 64, 256), (64, 256))
+PROTOS = pick(tuple(sorted(protocols())),
+              ("colibri", "lrscwait", "mwait_lock", "lrsc", "amo_lock"))
+WORKLOADS = pick(tuple(sorted(workloads())), ("rmw_loop",))
+CYCLES = pick(6_000, 2_000)
 
 #: protocols whose contenders never busy-wait (polls == 0 everywhere —
 #: the workload-grid benchmark asserts that; here we assert the paper's
@@ -46,31 +46,14 @@ POLLING_FREE = ("colibri", "lrscwait", "mwait_lock", "colibri_hier")
 FIXED_BACKOFF = dict(backoff=128, backoff_exp=1)
 
 
-def _scenario(wl: str) -> dict:
-    return dict(workloads.get(wl).scenario)
-
-
 def rows(cycles: int = CYCLES) -> List[Dict]:
-    labelled = [(wl, proto, n,
-                 SimParams(protocol=proto, workload=wl, n_cores=n,
-                           cycles=cycles, **_scenario(wl),
-                           **(FIXED_BACKOFF if proto.endswith("lock")
-                              else {})))
-                for wl in WORKLOADS for proto in PROTOS for n in CORES]
-    out = []
-    for (wl, proto, n, p), r in zip(labelled,
-                                    sweep([c for *_, c in labelled])):
-        out.append({"figure": "summary", "workload": wl, "protocol": proto,
-                    "cores": n,
-                    "ops_per_cycle": r["throughput"],
-                    "polls": int(r["polls"]),
-                    "jain_fairness": r["jain_fairness"],
-                    "fairness_span": json_safe(r["fairness_span"]),
-                    "lat_p50": r["lat_p50"],
-                    "lat_p95": r["lat_p95"],
-                    "lat_max": r["lat_max"],
-                    "energy_pj_per_op": r["energy_pj_per_op"]})
-    return out
+    study = Study.from_specs(
+        Spec(protocol=proto, workload=wl, n_cores=n, cycles=cycles,
+             **scenario(wl),
+             **(FIXED_BACKOFF if proto.endswith("lock") else {}))
+        for wl in WORKLOADS for proto in PROTOS for n in CORES)
+    return [r.to_row(figure="summary", ops_per_cycle=r.throughput)
+            for r in study.stream()]
 
 
 def headline(rs: List[Dict]) -> Dict[str, float]:

@@ -4,9 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows plus a headline summary that
 EXPERIMENTS.md quotes. Roofline/dry-run analysis lives in
 ``benchmarks/roofline.py`` (reads reports/dryrun/*.json).
 
-``--only <name>`` runs a single benchmark (substring match), e.g.::
+``--list`` prints the available benchmark names; ``--only <name>`` runs
+one benchmark (an exact name match wins, otherwise substring match);
+``--out DIR`` redirects the JSON report (default: ``reports/``)::
 
-    PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --only table1_area
+    PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --list
+    PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --only engine
+    PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --out /tmp/r
 """
 from __future__ import annotations
 
@@ -28,7 +32,7 @@ def _run(name, mod):
 
 
 def main(argv=None) -> None:
-    from repro.core.sweep import enable_persistent_cache
+    from repro.sync import enable_persistent_cache
     enable_persistent_cache()        # repeat runs skip XLA recompiles
     from benchmarks import (bench_area, bench_energy, bench_engine,
                             bench_histogram, bench_interference,
@@ -49,11 +53,24 @@ def main(argv=None) -> None:
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", metavar="NAME", default=None,
-                    help="run a single benchmark (substring match against "
-                         + ", ".join(benches))
+                    help="run a single benchmark (exact name first, then "
+                         "substring match against " + ", ".join(benches)
+                         + ")")
+    ap.add_argument("--list", action="store_true",
+                    help="print the available benchmark names and exit")
+    ap.add_argument("--out", metavar="DIR", default=None,
+                    help="directory for the JSON report "
+                         "(default: <repo>/reports)")
     args = ap.parse_args(argv)
+    if args.list:
+        for name in benches:
+            print(name)
+        return
     if args.only:
-        selected = {k: v for k, v in benches.items() if args.only in k}
+        if args.only in benches:          # exact name wins: "--only summary"
+            selected = {args.only: benches[args.only]}
+        else:                             # must not also run fig_summary etc.
+            selected = {k: v for k, v in benches.items() if args.only in k}
         if not selected:
             raise SystemExit(f"--only {args.only!r} matches none of: "
                              + ", ".join(benches))
@@ -65,7 +82,8 @@ def main(argv=None) -> None:
     for name, mod in selected.items():
         results[name] = _run(name, mod)
 
-    out_dir = os.path.join(os.path.dirname(__file__), "..", "reports")
+    out_dir = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                       "reports")
     os.makedirs(out_dir, exist_ok=True)
     suffix = f".{args.only}" if args.only else ""
     out_path = os.path.join(out_dir, f"benchmarks{suffix}.json")

@@ -1,6 +1,11 @@
-"""Reproduce every figure/table of the paper from the cycle-level simulator.
+"""Reproduce every figure/table of the paper from the cycle-level
+simulator, then show the public ``repro.sync`` Study API streaming a
+custom experiment.
 
     PYTHONPATH=src python examples/simulator_repro.py
+
+``REPRO_BENCH_QUICK=1`` trims every figure to its CI-smoke resolution
+(the benchmark modules read it via ``benchmarks._common``).
 """
 import os
 import sys
@@ -12,6 +17,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import (bench_area, bench_energy, bench_histogram,
                         bench_interference, bench_locks, bench_queue,
                         bench_workloads)
+from repro.sync import Spec, Study
 
 
 def main():
@@ -33,6 +39,16 @@ def main():
         for k, v in head.items():
             print(f"    {k} = {v:.3f}" if isinstance(v, float)
                   else f"    {k} = {v}")
+
+    # beyond the paper's figures: any custom study streams the same way
+    print("--- custom study: contention x latency, streamed as chunks "
+          "materialize")
+    study = Study(Spec(protocol="colibri", n_cores=64, cycles=4000)) \
+        .grid(n_addrs=(1, 16), lat=(1, 8))
+    for r in study.stream():
+        print(f"    n_addrs={r.spec.topology.n_addrs:2d} "
+              f"lat={r.spec.costs.lat}  ops/cycle={r.throughput:.4f}  "
+              f"p95={r.lat_p95:.0f}cyc  {r.energy_pj_per_op:.1f}pJ/op")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,8 @@
-"""repro.core — the paper's contribution.
+"""repro.core — the paper's contribution (engine layer).
+
+The supported user surface is ``repro.sync`` (Spec / Result / Study);
+everything here is the machinery it compiles onto — the legacy
+``sim.run`` / ``sweep.sweep`` entry points are deprecated shims.
 
 * ``dispatch``  — colibri ordered-commit: the LRSCwait insight (linearize at
   request time, serve in order, commit exactly once) as an SPMD primitive.
@@ -7,7 +11,8 @@
 * ``protocols`` — registry of synchronization protocol plugins (the
   paper's seven plus ``colibri_hier`` and ``ticket_lock``).
 * ``sweep``     — batched parameter sweeps: jit the engine once per
-  protocol, ``jax.vmap`` across the grid.
+  protocol, ``jax.vmap`` across the grid (batch + streaming executors).
+* ``metrics``   — single derivation layer for the paper's metric triple.
 * ``colibri``   — message-level protocol model (correctness: Section IV-A).
 * ``costmodel`` — area/energy models calibrated to Tables I–II.
 """

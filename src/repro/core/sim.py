@@ -40,6 +40,7 @@ through one compilation of this engine.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from types import SimpleNamespace
 from typing import Dict, Optional
@@ -120,6 +121,44 @@ class SimParams:
     n_groups: int = 4                # colibri_hier: clusters of cores
     zipf_skew: int = 100             # 100*s for ADDR_ZIPF streams (s=1.0)
     record_trace: bool = False       # emit (cycles, n) completed-step trace
+
+    # Early validation: bad names and impossible sizes fail HERE, with
+    # the registry's available names in the message, instead of deep
+    # inside a jit trace (or as a registry KeyError mid-``simulate``).
+    # ``repro.sync.Spec`` lowers onto this, so both API layers share one
+    # set of constraints and error texts.
+    _BOUNDS = (("n_cores", 1), ("cycles", 1), ("n_addrs", 1),
+               ("q_slots", 1), ("n_groups", 1), ("unroll", 1),
+               ("backoff_exp", 1), ("net_bw", 1), ("lat", 0),
+               ("work", 0), ("modify", 0), ("backoff", 0),
+               ("hol_block", 0), ("n_workers", 0), ("zipf_skew", 0))
+
+    def __post_init__(self):
+        if self.protocol not in proto_registry.names():
+            raise ValueError(
+                f"unknown protocol {self.protocol!r}; registered protocols: "
+                f"{', '.join(proto_registry.names())}")
+        if self.workload not in wl_registry.names():
+            raise ValueError(
+                f"unknown workload {self.workload!r}; registered workloads: "
+                f"{', '.join(wl_registry.names())}")
+        for fname, lo in self._BOUNDS:
+            v = getattr(self, fname)
+            if (not isinstance(v, (int, np.integer))
+                    or isinstance(v, bool) or v < lo):
+                raise ValueError(
+                    f"{fname} must be an int >= {lo} (got {v!r})")
+        if not isinstance(self.seed, (int, np.integer)) \
+                or isinstance(self.seed, bool):
+            raise ValueError(f"seed must be an int (got {self.seed!r})")
+        if not isinstance(self.record_trace, (bool, np.bool_)):
+            raise ValueError(
+                f"record_trace must be a bool (got {self.record_trace!r})")
+        wl = wl_registry.get(self.workload)
+        if self.n_addrs < wl.min_addrs:
+            raise ValueError(
+                f"workload {self.workload!r} needs n_addrs >= "
+                f"{wl.min_addrs} (got {self.n_addrs})")
 
 
 def _hash(x):
@@ -212,9 +251,6 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     choice; never changes results)."""
     proto = proto_registry.get(p.protocol)
     wl = wl_registry.get(p.workload)
-    if p.n_addrs < wl.min_addrs:
-        raise ValueError(f"workload {wl.name!r} needs n_addrs >= "
-                         f"{wl.min_addrs} (got {p.n_addrs})")
     prog = wl.program(p)
     pt = prog.tables()                   # static micro-op table (int32)
     L = prog.length
@@ -563,8 +599,26 @@ def derive_metrics(res: Dict[str, np.ndarray], n_workers: int, cycles: int,
     return metrics_mod.attach(res, n_workers, cycles, fit=energy_fit)
 
 
-def run(p: SimParams, energy_fit=None) -> Dict[str, np.ndarray]:
+def execute(p: SimParams, energy_fit=None) -> Dict[str, np.ndarray]:
+    """Run one configuration and return the raw metric-annotated result
+    dict.  Internal engine entry point: the supported public surface is
+    :func:`repro.sync.run`, which wraps this in a typed
+    :class:`repro.sync.Result`."""
     out = _run(p)
     res = {k: np.asarray(v) for k, v in out.items()}
     return derive_metrics(res, min(p.n_workers, p.n_cores), p.cycles,
                           energy_fit=energy_fit)
+
+
+def run(p: SimParams, energy_fit=None) -> Dict[str, np.ndarray]:
+    """Deprecated legacy entry point — use ``repro.sync.run(Spec(...))``.
+
+    Behaviour is unchanged (bit-identical result dict; the equivalence
+    is locked in by ``tests/test_sync_api.py``); only the warning is
+    new.
+    """
+    warnings.warn(
+        "repro.core.sim.run() is deprecated; use repro.sync.run(Spec(...))"
+        " which returns a typed Result (run().stats carries this dict).",
+        DeprecationWarning, stacklevel=2)
+    return execute(p, energy_fit=energy_fit)

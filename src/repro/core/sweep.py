@@ -1,13 +1,19 @@
 """Batched parameter sweeps: jit the engine once, ``vmap`` the grid.
 
-The benchmark figures each run dozens of ``SimParams`` configurations.
-``sim.run`` jits per *static* parameter set, so a sweep over
+The benchmark figures each run dozens of configurations.  The engine
+jits per *static* parameter set, so a sweep over
 ``(seed, n_addrs, lat, work, ...)`` used to pay one full XLA compile per
 point.  This runner groups configurations by their static fingerprint
 (protocol, workload program, core count, cycle count, queue capacity,
 group count, trace flag, unroll factor), lifts
 every other scalar into a traced axis (``sim.DYN_FIELDS``), and runs each
 group through a single ``jax.vmap``-ed compilation of the engine.
+
+Entry points: :func:`sweep_params` (list in, input-order list out) and
+:func:`sweep_iter` (generator yielding points as chunks materialize) —
+both internal machinery behind ``repro.sync.Study.run()`` /
+``.stream()``; the module-level :func:`sweep` / :func:`sweep_grid` are
+deprecated legacy shims over them.
 
 Executor shape (the hot path behind every figure):
 
@@ -50,8 +56,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from functools import partial
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,21 +139,18 @@ def _batch_sharding():
     return NamedSharding(mesh, PartitionSpec("batch")), len(devs)
 
 
-def sweep(configs: Sequence[SimParams], max_batch: Optional[int] = None,
-          energy_fit=None) -> List[Dict[str, np.ndarray]]:
-    """Run every configuration; returns one result dict per config (same
-    keys and values as ``sim.run``), in input order — including the
-    paper metric triple (``jain_fairness`` / ``lat_p95`` /
-    ``energy_pj_per_op``) attached per point by the shared derivation
-    layer (``core.metrics``).  ``energy_fit`` overrides the frozen
-    Table II calibration used for ``energy_pj_per_op``.
-
-    Configurations sharing a static fingerprint are batched through one
-    vmapped compile in ``max_batch``-point chunks; a heterogeneous list
-    degrades gracefully to one compile per fingerprint.  Chunks are
-    dispatched up to a 4-chunk look-ahead window before results are
-    materialized (one ``device_get`` per chunk), and the batch axis is
-    sharded across devices when more than one is visible.
+def sweep_iter(configs: Sequence[SimParams],
+               max_batch: Optional[int] = None, energy_fit=None
+               ) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+    """Streaming sweep: yield ``(index, result)`` pairs as chunks
+    materialize, in chunk-completion order (fingerprint groups in
+    first-appearance order, chunks in order within a group) — NOT input
+    order.  Each result dict is exactly what :func:`sweep` returns for
+    that config, metric triple included; consumers that need input
+    order collect into a list by index (that is all :func:`sweep`
+    does).  This is the engine behind ``repro.sync.Study.stream()``:
+    figure scripts consume points while later chunks are still in
+    flight instead of waiting on the full grid.
     """
     if max_batch is None:
         max_batch = int(os.environ.get("REPRO_SWEEP_MAX_BATCH",
@@ -157,7 +161,6 @@ def sweep(configs: Sequence[SimParams], max_batch: Optional[int] = None,
     for i, c in enumerate(configs):
         groups.setdefault(_static_key(c), []).append(i)
     sharding, ndev = _batch_sharding()
-    results: List[Dict[str, np.ndarray]] = [None] * len(configs)  # type: ignore
     pending: List[tuple] = []                    # dispatched, not fetched
 
     def materialize(part, out):
@@ -165,7 +168,7 @@ def sweep(configs: Sequence[SimParams], max_batch: Optional[int] = None,
         out_np = jax.device_get(out)
         for j, i in enumerate(part):             # padding rows never read
             res = {k: v[j] for k, v in out_np.items()}
-            results[i] = derive_metrics(
+            yield i, derive_metrics(
                 res, min(configs[i].n_workers, configs[i].n_cores),
                 configs[i].cycles, energy_fit=energy_fit)
 
@@ -216,18 +219,66 @@ def sweep(configs: Sequence[SimParams], max_batch: Optional[int] = None,
                 dyn = jax.device_put(dyn, sharding)
             pending.append((part, _sweep_group(crep, dyn, len(padded))))
             if len(pending) >= window:
-                materialize(*pending.pop(0))
+                yield from materialize(*pending.pop(0))
     for part, out in pending:
-        materialize(part, out)
+        yield from materialize(part, out)
+
+
+def sweep_params(configs: Sequence[SimParams],
+                 max_batch: Optional[int] = None, energy_fit=None
+                 ) -> List[Dict[str, np.ndarray]]:
+    """Run every configuration; returns one result dict per config (same
+    keys and values as ``sim.execute``), in input order — including the
+    paper metric triple (``jain_fairness`` / ``lat_p95`` /
+    ``energy_pj_per_op``) attached per point by the shared derivation
+    layer (``core.metrics``).  ``energy_fit`` overrides the frozen
+    Table II calibration used for ``energy_pj_per_op``.
+
+    Configurations sharing a static fingerprint are batched through one
+    vmapped compile in ``max_batch``-point chunks; a heterogeneous list
+    degrades gracefully to one compile per fingerprint.  Chunks are
+    dispatched up to a 4-chunk look-ahead window before results are
+    materialized (one ``device_get`` per chunk), and the batch axis is
+    sharded across devices when more than one is visible.
+
+    Internal engine entry point: the supported public surface is
+    :class:`repro.sync.Study`, which wraps each point in a typed
+    :class:`repro.sync.Result`.
+    """
+    results: List[Dict[str, np.ndarray]] = [None] * len(configs)  # type: ignore
+    for i, res in sweep_iter(configs, max_batch=max_batch,
+                             energy_fit=energy_fit):
+        results[i] = res
     return results
+
+
+def sweep(configs: Sequence[SimParams], max_batch: Optional[int] = None,
+          energy_fit=None) -> List[Dict[str, np.ndarray]]:
+    """Deprecated legacy entry point — use ``repro.sync.Study``.
+
+    Behaviour is unchanged (bit-identical result dicts, input order;
+    locked in by ``tests/test_sync_api.py``); only the warning is new.
+    """
+    warnings.warn(
+        "repro.core.sweep.sweep() is deprecated; use repro.sync.Study "
+        "(Study.from_specs(...).run() / .stream()) which returns typed "
+        "Results.", DeprecationWarning, stacklevel=2)
+    return sweep_params(configs, max_batch=max_batch, energy_fit=energy_fit)
 
 
 def sweep_grid(base: SimParams, max_batch: Optional[int] = None,
                energy_fit=None, **axes: Sequence
                ) -> List[Dict[str, np.ndarray]]:
-    """Cartesian sweep: ``sweep_grid(base, n_addrs=(1, 16), seed=(0, 1))``
-    runs every combination (last axis fastest) and returns results plus a
-    ``_config`` entry recording each point's SimParams."""
+    """Deprecated legacy entry point — use
+    ``repro.sync.Study(base).grid(...)``.
+
+    Cartesian sweep: ``sweep_grid(base, n_addrs=(1, 16), seed=(0, 1))``
+    runs every combination (last axis fastest) and returns results plus
+    a ``_config`` entry recording each point's SimParams."""
+    warnings.warn(
+        "repro.core.sweep.sweep_grid() is deprecated; use "
+        "repro.sync.Study(base_spec).grid(...).run() / .stream().",
+        DeprecationWarning, stacklevel=2)
     for name in axes:
         if name not in DYN_FIELDS:
             raise ValueError(f"{name!r} is not sweepable; axes: {DYN_FIELDS}")
@@ -235,7 +286,8 @@ def sweep_grid(base: SimParams, max_batch: Optional[int] = None,
     for name, values in axes.items():
         points = [dataclasses.replace(pt, **{name: v})
                   for pt in points for v in values]
-    results = sweep(points, max_batch=max_batch, energy_fit=energy_fit)
+    results = sweep_params(points, max_batch=max_batch,
+                           energy_fit=energy_fit)
     for pt, res in zip(points, results):
         res["_config"] = pt
     return results

@@ -1,0 +1,266 @@
+"""The ``repro.sync`` public API: bit-identical to the legacy surface,
+validated at construction, streaming-equivalent to batch execution.
+
+* **Equivalence** — ``repro.sync.run(Spec(...))`` matches the legacy
+  ``sim.run(SimParams(...))`` result dict exactly over the FULL
+  protocol × workload grid (the protocol-golden configurations of
+  ``tests/test_workloads.py``), and ``Study.run()``/``Study.stream()``
+  match the legacy ``sweep()`` shim on a multi-fingerprint,
+  multi-chunk grid — so the deprecated shims can never drift from the
+  new front door.
+* **Deprecation** — ``sim.run`` / ``sweep.sweep`` / ``sweep.sweep_grid``
+  warn but keep working.
+* **Validation** — unknown protocol/workload names and impossible
+  field values raise ``ValueError`` at ``Spec``/``SimParams``
+  construction, naming the registries' available entries.
+* **Schema** — ``Result.to_json`` round-trips the paper's metric
+  triple; ``to_row`` is strict-JSON safe (non-finite → ``None``).
+"""
+import dataclasses
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import protocols, workloads
+from repro.core import sim as sim_mod
+from repro.core import sweep as sweep_mod
+from repro.core.sim import SimParams
+from repro.sync import (Costs, Result, Spec, Study, Topology, run,
+                        scenario)
+from repro.sync.spec import _FLAT_TO_GROUP
+
+#: same static shapes as tests/test_workloads.py's cross-product suite,
+#: so the per-fingerprint engine compiles are shared within one session
+GRID_KW = dict(n_cores=16, n_addrs=4, cycles=2500, record_trace=True)
+
+#: keys that must match exactly (integer engine state + the shared
+#: metric derivation) — superset of tests/test_sweep.py's list
+EXACT_KEYS = ("ops", "opc", "msgs", "polls", "addr_ops", "sleep_cyc",
+              "bar_cyc", "backoff_cyc", "bank_ops", "net_stall",
+              "throughput", "fairness_min", "fairness_max",
+              "lat_hist", "lat_max", "lat_p50", "lat_p95",
+              "jain_fairness", "fairness_span", "energy_pj_per_op")
+
+
+def _assert_same(new, old):
+    for k in EXACT_KEYS:
+        assert np.array_equal(np.asarray(new[k]), np.asarray(old[k])), k
+
+
+def _silently(fn, *args, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kw)
+
+
+# ------------------------------------------------------------ equivalence
+
+@pytest.mark.parametrize("wl", workloads.names())
+@pytest.mark.parametrize("proto", protocols.names())
+def test_run_bit_identical_to_legacy_full_grid(proto, wl):
+    """Every protocol × every workload: the typed front door and the
+    deprecated ``sim.run`` return the exact same numbers."""
+    new = run(Spec(protocol=proto, workload=wl, **GRID_KW))
+    old = _silently(sim_mod.run,
+                    SimParams(protocol=proto, workload=wl, **GRID_KW))
+    _assert_same(new.stats, old)
+    assert new.spec.to_params() == SimParams(protocol=proto, workload=wl,
+                                             **GRID_KW)
+
+
+def test_study_and_stream_match_legacy_sweep():
+    """Study.run() == legacy sweep() bit-for-bit on a grid mixing
+    protocols, bank buckets and seeds; Study.stream() yields the same
+    points (chunk-completion order) on a ≥2-chunk execution."""
+    study = Study(Spec(n_cores=16, cycles=600)) \
+        .grid(protocol=("colibri", "lrsc"), n_addrs=(1, 8)) \
+        .zip(seed=(0, 1, 2))
+    specs = study.specs()
+    assert len(specs) == len(study) == 12
+    legacy = _silently(sweep_mod.sweep, [s.to_params() for s in specs],
+                       max_batch=2)
+    batch = study.run(max_batch=2)
+    for n, o in zip(batch, legacy):
+        _assert_same(n.stats, o)
+    # streaming: same rows, identified by spec (≥2 chunks at max_batch=2)
+    streamed = {}
+    for r in study.stream(max_batch=2):
+        assert r.spec not in streamed
+        streamed[r.spec] = r
+    want = {s: r for s, r in zip(specs, batch)}
+    assert set(streamed) == set(want)
+    for s in specs:
+        _assert_same(streamed[s].stats, want[s].stats)
+
+
+def test_sweep_grid_shim_matches_study_grid():
+    base = Spec(protocol="amo", n_cores=16, cycles=600)
+    legacy = _silently(sweep_mod.sweep_grid, base.to_params(),
+                       n_addrs=(1, 4), seed=(0, 1))
+    new = Study(base).grid(n_addrs=(1, 4), seed=(0, 1)).run()
+    assert [(r.spec.topology.n_addrs, r.spec.costs.seed) for r in new] \
+        == [(q["_config"].n_addrs, q["_config"].seed) for q in legacy]
+    for r, q in zip(new, legacy):
+        _assert_same(r.stats, q)
+
+
+# ------------------------------------------------------------ deprecation
+
+def test_legacy_entry_points_emit_deprecation_warning():
+    p = SimParams(protocol="amo", n_cores=8, cycles=60)
+    with pytest.warns(DeprecationWarning, match="repro.sync.run"):
+        sim_mod.run(p)
+    with pytest.warns(DeprecationWarning, match="repro.sync.Study"):
+        sweep_mod.sweep([p])
+    with pytest.warns(DeprecationWarning, match="grid"):
+        sweep_mod.sweep_grid(p, seed=(0,))
+
+
+# ------------------------------------------------- construction-time errors
+
+@pytest.mark.parametrize("ctor", [Spec, SimParams])
+def test_unknown_protocol_names_registry(ctor):
+    with pytest.raises(ValueError) as e:
+        ctor(protocol="no_such_protocol")
+    for name in protocols.names():               # error lists every entry
+        assert name in str(e.value)
+
+
+@pytest.mark.parametrize("ctor", [Spec, SimParams])
+def test_unknown_workload_names_registry(ctor):
+    with pytest.raises(ValueError) as e:
+        ctor(workload="no_such_workload")
+    for name in workloads.names():
+        assert name in str(e.value)
+
+
+@pytest.mark.parametrize("bad", [dict(n_cores=0), dict(n_cores=-4),
+                                 dict(cycles=0), dict(n_addrs=0),
+                                 dict(unroll=0), dict(q_slots=0),
+                                 dict(workload="ms_queue", n_addrs=1)])
+@pytest.mark.parametrize("ctor", [Spec, SimParams])
+def test_invalid_values_raise_at_construction(ctor, bad):
+    with pytest.raises(ValueError):
+        ctor(**bad)
+
+
+def test_unknown_spec_field_rejected():
+    with pytest.raises(ValueError, match="unknown Spec field"):
+        Spec(n_cores=8, frequency=3)
+    with pytest.raises(ValueError, match="unknown Spec field"):
+        Spec(n_cores=8).replace(frequency=3)
+    with pytest.raises(ValueError, match="unknown protocol field"):
+        Spec(protocol={"name": "colibri", "slots": 8})
+
+
+# ------------------------------------------------------- Spec construction
+
+def test_spec_construction_forms_agree():
+    flat = Spec(protocol="lrscwait", workload="ms_queue", q_slots=8,
+                n_cores=64, n_addrs=2, lat=3, seed=7)
+    grouped = Spec(protocol={"name": "lrscwait", "q_slots": 8},
+                   workload="ms_queue",
+                   topology={"n_cores": 64, "n_addrs": 2},
+                   costs={"lat": 3, "seed": 7})
+    typed = Spec(protocol={"name": "lrscwait", "q_slots": 8},
+                 workload="ms_queue",
+                 topology=Topology(n_cores=64, n_addrs=2),
+                 costs=Costs(lat=3, seed=7))
+    assert flat == grouped == typed
+    assert flat == Spec.from_dict(flat.to_dict())          # nested dict
+    assert flat == Spec.from_json(flat.to_json())          # JSON
+    assert flat == Spec.from_params(flat.to_params())      # SimParams lift
+    assert hash(flat) == hash(grouped)                     # dict-key usable
+
+
+def test_spec_replace_partial_groups():
+    base = Spec(protocol="colibri", n_cores=64)
+    r = base.replace(protocol="lrsc", topology={"n_addrs": 8}, seed=3)
+    assert r.protocol.name == "lrsc"
+    assert r.protocol.q_slots == base.protocol.q_slots     # kept
+    assert r.topology.n_addrs == 8 and r.topology.n_cores == 64
+    assert r.costs.seed == 3
+    assert base.costs.seed == 0                            # frozen
+
+
+def test_spec_replace_group_instance_plus_flat_field():
+    """A whole-group instance and a flat field of the same group compose
+    regardless of kwarg order: the flat change lands on top."""
+    base = Spec(protocol="colibri")
+    for r in (base.replace(costs=Costs(cycles=100), seed=5),
+              base.replace(seed=5, costs=Costs(cycles=100))):
+        assert r.costs.cycles == 100 and r.costs.seed == 5
+
+
+def test_spec_covers_every_simparams_field():
+    """Adding a SimParams field without classifying it into a Spec
+    sub-group must fail loudly (the twin of the sweep's STATIC/DYN
+    coverage test)."""
+    flat = set(_FLAT_TO_GROUP) | {"protocol", "workload"}
+    assert flat == {f.name for f in dataclasses.fields(SimParams)}
+
+
+# ------------------------------------------------------------------ Result
+
+def test_result_json_round_trip_preserves_triple():
+    r = run(Spec(protocol="colibri", workload="ms_queue", n_cores=16,
+                 cycles=400, **scenario("ms_queue")))
+    r2 = Result.from_json(r.to_json())
+    assert r2.spec == r.spec
+    assert (r2.throughput, r2.jain_fairness, r2.energy_pj_per_op) \
+        == (r.throughput, r.jain_fairness, r.energy_pj_per_op)
+    assert (r2.lat_p50, r2.lat_p95, r2.lat_max) \
+        == (r.lat_p50, r.lat_p95, r.lat_max)
+    assert r2.polls == r.polls and r2.ops_total == r.ops_total
+    # a second serialization round is stable (metrics-only stats)
+    assert json.loads(r2.to_json()) == json.loads(r.to_json())
+
+
+def test_result_row_is_strict_json_safe():
+    r = run(Spec(protocol="colibri", n_cores=8, cycles=300))
+    row = r.to_row(figure="x", extra_ratio=float("nan"))
+    json.dumps(row)                                        # no Infinity/NaN
+    assert row["figure"] == "x" and row["extra_ratio"] is None
+    for k in ("throughput", "jain_fairness", "energy_pj_per_op",
+              "lat_p95"):
+        assert isinstance(row[k], float) and math.isfinite(row[k])
+    starved = Result(spec=r.spec,
+                     stats={**dict(r.stats),
+                            "fairness_span": float("inf")})
+    assert starved.to_row()["fairness_span"] is None
+    # a starved span survives the JSON round trip as inf (not a dropped
+    # key that would KeyError the accessor and shrink later rows)
+    back = Result.from_json(starved.to_json())
+    assert back.fairness_span == math.inf
+    assert back.to_row()["fairness_span"] is None
+
+
+# ------------------------------------------------------------------- Study
+
+def test_study_grid_zip_ordering_and_immutability():
+    s0 = Study(protocol="amo", n_cores=8, cycles=100)
+    s1 = s0.grid(n_addrs=(1, 2), lat=(3, 5))
+    s2 = s1.zip(seed=(0, 1), work=(10, 12))
+    assert len(s0) == 1 and len(s1) == 4 and len(s2) == 8  # forks kept
+    pts = [(x.topology.n_addrs, x.costs.lat, x.costs.seed, x.costs.work)
+           for x in s2.specs()]
+    assert pts == [(1, 3, 0, 10), (1, 3, 1, 12), (1, 5, 0, 10),
+                   (1, 5, 1, 12), (2, 3, 0, 10), (2, 3, 1, 12),
+                   (2, 5, 0, 10), (2, 5, 1, 12)]
+
+
+def test_study_axis_errors():
+    st = Study(protocol="amo")
+    with pytest.raises(ValueError, match="equal length"):
+        st.zip(seed=(0, 1), lat=(1,))
+    with pytest.raises(ValueError, match="empty"):
+        st.grid(seed=())
+    with pytest.raises(ValueError):                        # unknown field
+        st.grid(n_banks=(1, 2)).specs()
+    with pytest.raises(ValueError):                        # bad value, eager
+        st.grid(n_cores=(8, 0)).specs()
+    with pytest.raises(ValueError):
+        Study.from_specs([])

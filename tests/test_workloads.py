@@ -55,7 +55,10 @@ def test_program_validation():
 
 
 def test_unknown_workload_raises():
-    with pytest.raises(KeyError):
+    """Since the repro.sync redesign, a bad name fails at SimParams
+    construction with the registry's entries — not as a KeyError deep in
+    the engine."""
+    with pytest.raises(ValueError, match="registered workloads"):
         run(SimParams(workload="no_such_workload", n_cores=8, cycles=100))
 
 
