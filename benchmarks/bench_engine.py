@@ -9,8 +9,16 @@ compilation cache makes repeated benchmark runs skip compiles anyway):
   The 1024-core row is the run the argsort-arbitration engine made
   impractical; the headline checks it now completes under the old
   256-core wall budget.
+  The full pass adds a 4096-core row — the scale target of the Pallas
+  fused-step backend — checked against the same old 256-core budget.
 * **unroll ablation** — the 256-core run at ``unroll`` 1 / 4 / 8
   (EXPERIMENTS.md §Engine-throughput quotes the table).
+* **backend pair** — the identical 256-core Spec run on
+  ``backend="xla_cpu"`` vs the Pallas path (the native ``pallas_gpu`` /
+  ``pallas_tpu`` lowering when an accelerator is visible, else the
+  ``pallas_interpret`` debugging path, which is expected to be slow —
+  the ratio is only a perf claim on accelerator hosts; on CPU it just
+  pins that the kernel path runs end-to-end).
 * **grid256** — the ``workloads_grid`` study (5 workloads × 5 protocols
   × 2 seeds) at 256 cores through ``Study.run()``, reported as points
   per second.  The acceptance bar for the hot-path overhaul is ≥2×
@@ -30,12 +38,14 @@ from __future__ import annotations
 from typing import Dict, List
 
 from benchmarks._common import pick, time_best
+from repro.core.sim import resolve_backend
 from repro.sync import Spec, Study, run
 
 ENGINE_CYCLES = pick(20_000, 2_000)
-ENGINE_CORES = pick((64, 256, 1024), (64, 256))
+ENGINE_CORES = pick((64, 256, 1024, 4096), (64, 256))
 UNROLLS = pick((2, 4, 8), ())              # default unroll=1 is the
 GRID_CYCLES = pick(3_000, 1_000)           # engine_256c row itself
+PAIR_CYCLES = pick(2_000, 500)             # backend pair: interpret-safe
 GRID_WORKLOADS = pick(("rmw_loop", "ms_queue", "treiber_stack",
                        "zipf_histogram", "barrier_phases"),
                       ("rmw_loop", "ms_queue"))
@@ -56,6 +66,13 @@ PRE_PR = {
 }
 
 
+def _pallas_backend() -> str:
+    """The Pallas backend this host can actually run: the native
+    lowering when ``auto`` resolves to one, else the interpreter."""
+    bk = resolve_backend("auto")
+    return bk if bk.startswith("pallas") else "pallas_interpret"
+
+
 def _grid_study() -> Study:
     from benchmarks.bench_workloads import _scenario
     return Study.from_specs(
@@ -66,13 +83,14 @@ def _grid_study() -> Study:
 
 
 def rows() -> List[Dict]:
+    bk = resolve_backend("auto")
     out: List[Dict] = []
     for n in ENGINE_CORES:
         s = Spec(protocol="colibri", n_cores=n, cycles=ENGINE_CYCLES)
         dt = time_best(lambda: run(s), reps=1 if n >= 1024 else 3)
         label = f"engine_{n}c"
         out.append({"figure": "engine", "row": label, "n_cores": n,
-                    "cycles": ENGINE_CYCLES, "wall_s": dt,
+                    "cycles": ENGINE_CYCLES, "backend": bk, "wall_s": dt,
                     "core_cycles_per_s": n * ENGINE_CYCLES / dt,
                     "pre_pr_core_cycles_per_s": PRE_PR.get(label)})
     for u in UNROLLS:
@@ -80,12 +98,21 @@ def rows() -> List[Dict]:
                  unroll=u)
         dt = time_best(lambda: run(s))
         out.append({"figure": "engine", "row": f"unroll_{u}", "n_cores": 256,
-                    "cycles": ENGINE_CYCLES, "wall_s": dt,
+                    "cycles": ENGINE_CYCLES, "backend": bk, "wall_s": dt,
                     "core_cycles_per_s": 256 * ENGINE_CYCLES / dt})
+    pb = _pallas_backend()
+    s = Spec(protocol="colibri", n_cores=256, cycles=PAIR_CYCLES)
+    dt_x = time_best(lambda: run(s.replace(backend="xla_cpu")), reps=1)
+    dt_p = time_best(lambda: run(s.replace(backend=pb)), reps=1)
+    out.append({"figure": "engine", "row": "backend_pair_256c",
+                "n_cores": 256, "cycles": PAIR_CYCLES,
+                "backend": f"xla_cpu_vs_{pb}", "wall_s": dt_x,
+                "wall_s_xla": dt_x, "wall_s_pallas": dt_p,
+                "pallas_over_xla": dt_p / dt_x})
     study = _grid_study()
     dt = time_best(lambda: study.run(), reps=1)
     out.append({"figure": "engine", "row": "grid256", "n_points": len(study),
-                "cycles": GRID_CYCLES, "wall_s": dt,
+                "cycles": GRID_CYCLES, "backend": bk, "wall_s": dt,
                 "points_per_s": len(study) / dt,
                 "pre_pr_points_per_s": PRE_PR["grid256_points_per_s"]})
     return out
@@ -104,6 +131,14 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
         head["engine_1024c_Mcyc_per_s"] = e1024["core_cycles_per_s"] / 1e6
         head["engine_1024c_under_old_256c_budget"] = float(
             e1024["wall_s"] <= PRE_PR["engine_256c_wall_s"])
+    e4096 = by.get("engine_4096c")
+    if e4096:
+        head["engine_4096c_Mcyc_per_s"] = e4096["core_cycles_per_s"] / 1e6
+        head["engine_4096c_under_old_256c_budget"] = float(
+            e4096["wall_s"] <= PRE_PR["engine_256c_wall_s"])
+    pair = by.get("backend_pair_256c")
+    if pair:
+        head["backend_pair_pallas_over_xla"] = pair["pallas_over_xla"]
     grid = by["grid256"]
     head["grid256_points_per_s"] = grid["points_per_s"]
     if "engine_1024c" in by:                    # full (non-QUICK) pass

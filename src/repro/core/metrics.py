@@ -126,6 +126,34 @@ def _percentile_from_waits(waits: np.ndarray, q: float) -> float:
     return float(s[max(int(math.ceil(q * s.size)), 1) - 1])
 
 
+def trace_latency_hist(res: Dict[str, np.ndarray],
+                       use_kernel: bool = True) -> np.ndarray:
+    """Exact-trace completion-latency histogram on the engine's geometric
+    bins — the recorded per-completion waits (``record_trace=True``)
+    folded onto the same ``LAT_BINS``/``LAT_SUB`` geometry as the
+    always-on ``lat_hist`` accumulator, so the two are directly
+    comparable (equal, in fact: both count every retirement once —
+    ``tests/test_kernels.py`` pins this against a live engine run).
+
+    The commit goes through the ``colibri_scatter`` Pallas kernel (the
+    paper's retry-free scatter-RMW counting its own latencies);
+    ``use_kernel=False`` uses a plain ``np.bincount``.
+    """
+    tw = np.asarray(res["trace_wait"])
+    waits = tw[tw >= 0]
+    if waits.size == 0:
+        return np.zeros((LAT_BINS,), np.int32)
+    # identical bucket math to the engine's in-scan accumulator,
+    # including the float32 rounding
+    bkt = np.clip((LAT_SUB * np.log2(
+        waits.astype(np.float32) + np.float32(1.0))).astype(np.int32),
+        0, LAT_BINS - 1)
+    if not use_kernel:
+        return np.bincount(bkt, minlength=LAT_BINS).astype(np.int32)
+    from repro.kernels.colibri_scatter import colibri_histogram
+    return np.asarray(colibri_histogram(bkt, LAT_BINS))
+
+
 def latency_percentiles(res: Dict[str, np.ndarray]) -> Dict[str, float]:
     """p50/p95/max completion latency for one result dict.
 

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.protocols.base import NXT_WORK_DONE, RESP, Protocol
+from repro.core.protocols.base import (NXT_WORK_DONE, OUT_DONE, OUT_NONE,
+                                       RESP, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -22,3 +23,10 @@ class Amo(Protocol):
         cs["tmr"] = jnp.where(ctx.is_acq, p.lat, cs["tmr"])
         cs["nxt"] = jnp.where(ctx.is_acq, NXT_WORK_DONE, cs["nxt"])
         return cs, bank
+
+    def fused_access(self, fx, bank):
+        # the AMO commits at the bank: every acquire winner retires in
+        # one access (amo cores never issue a release phase)
+        kind = jnp.where(fx.acq_b, OUT_DONE, OUT_NONE).astype(jnp.int32)
+        tmr = jnp.full_like(kind, fx.p.lat)
+        return bank, FusedOut(kind=kind, tmr=tmr)

@@ -34,6 +34,15 @@ P_ACQ, P_REL = 0, 1
 # resp_next codes
 NXT_WORK_DONE, NXT_MOD, NXT_BACKOFF = 0, 1, 2
 
+# per-bank outcome codes emitted by the kernel-fusable form
+# (``fused_access``): what happens to this bank's winning core.  The
+# engine maps them back onto the per-core (st, nxt) writes the masked
+# ``on_access`` form performs directly — OUT_GRANT -> RESP/NXT_MOD,
+# OUT_DONE -> RESP/NXT_WORK_DONE (and one latency-histogram sample),
+# OUT_FAIL -> RESP/NXT_BACKOFF (and one poll), OUT_SLEEP -> SLEEP with
+# the timer untouched, OUT_NONE -> no winner / no core-side effect.
+OUT_NONE, OUT_GRANT, OUT_DONE, OUT_FAIL, OUT_SLEEP = 0, 1, 2, 3, 4
+
 
 def mset(arr, idx, mask, val):
     """Masked scatter-set: only lanes with mask write; others dropped
@@ -80,6 +89,59 @@ class Ctx:
     mod_dur: jnp.ndarray = None
 
 
+@dataclasses.dataclass
+class FusedCtx:
+    """Bank-centric view handed to :meth:`Protocol.fused_access` — the
+    kernel-fusable twin of :class:`Ctx`.
+
+    Everything is **block-local and dense over banks**: the arrays are
+    ``(a,)``-shaped for the bank block being processed (the whole bank
+    range on the reference path, one tile of it inside the Pallas
+    ``engine_step`` kernel), and there are NO ``(n,)``-shaped core
+    arrays to write — per-core effects are *returned* as outcome codes
+    and scattered by the engine.  A conforming ``fused_access``:
+
+    * reads/writes bank state arrays sliced to this block (every bank
+      array's leading dim is ``m * a`` for some per-protocol ``m``, so
+      blocks slice cleanly);
+    * indexes banks with a **local** iota (``jnp.arange(a)``), never a
+      global bank id;
+    * touches per-core state only through ``core`` (values the engine
+      gathered at the winning core) and the returned ``xset`` writes;
+    * treats ``p`` fields as possibly-traced scalars (inside the kernel
+      they arrive through the scalar operand, not a Python closure).
+    """
+    p: Any                   # resolved params namespace (lat, ... traced ok)
+    n: int                   # cores (static)
+    a: int                   # banks in THIS block (static)
+    q_cap: int               # queue slots per bank (static)
+    win: jnp.ndarray         # (a,) int32 winning core id, or n if none
+    acq_b: jnp.ndarray       # (a,) bool — winner is an acquire
+    rel_b: jnp.ndarray       # (a,) bool — winner is a release
+    #: per-core values gathered at ``min(win, n-1)`` for the fields the
+    #: protocol listed in ``fused_core_fields`` (mask with acq_b/rel_b)
+    core: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class FusedOut:
+    """Per-bank outputs of :meth:`Protocol.fused_access`.
+
+    ``kind`` drives the engine's generic core-side apply (see the
+    ``OUT_*`` codes); ``tmr`` is the response timer for the RESP-kind
+    outcomes (``OUT_GRANT``/``OUT_DONE``/``OUT_FAIL``); ``msgs`` counts
+    protocol side-messages beyond the engine's 2-per-winner; ``xset``
+    maps a per-core state field name to ``(values, mask)`` pairs the
+    engine scatters to the winning cores (e.g. the ticket lock's drawn
+    ticket).  Polls are derived: every ``OUT_FAIL`` is one poll.
+    """
+    kind: jnp.ndarray        # (a,) int32 OUT_* code
+    tmr: jnp.ndarray         # (a,) int32 response timer for RESP kinds
+    msgs: jnp.ndarray = None          # (a,) int32 extra messages (or None)
+    xset: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+
+
 class Protocol:
     """Base protocol plugin. Subclasses override the hooks they need."""
 
@@ -90,6 +152,12 @@ class Protocol:
     #: lock-style protocols use the paper's FIXED backoff (exp cap 1);
     #: bare retry protocols use the calibrated exponential policy.
     fixed_backoff: bool = False
+    #: per-core state fields ``fused_access`` needs gathered at the
+    #: winning core (handed back as ``FusedCtx.core``)
+    fused_core_fields: Tuple[str, ...] = ()
+    #: per-core state fields ``fused_access`` may write via
+    #: ``FusedOut.xset`` (static: sizes the kernel's output pytree)
+    fused_xset_fields: Tuple[str, ...] = ()
 
     # ---- static sizing ----
     def q_cap(self, p, n: int) -> int:
@@ -107,6 +175,21 @@ class Protocol:
     def on_access(self, ctx: Ctx, cs: Dict, bank: Dict
                   ) -> Tuple[Dict, Dict]:
         raise NotImplementedError
+
+    def fused_access(self, fx: FusedCtx, bank: Dict
+                     ) -> Tuple[Dict, FusedOut]:
+        """Kernel-fusable dense bank update: the bank-state side of
+        :meth:`on_access`, restated so the Pallas ``engine_step`` kernel
+        (``repro.kernels.engine_step``) can trace it over one bank tile
+        — block-local, dense over banks, per-core effects returned as
+        ``OUT_*`` outcome codes instead of written.  Must be
+        behaviourally identical to ``on_access`` + the engine's generic
+        outcome apply; ``tests/test_engine_backend.py`` pins the two
+        paths bit-identical across the full protocol × workload grid.
+        """
+        raise NotImplementedError(
+            f"protocol {self.name!r} does not provide the kernel-fusable "
+            f"fused_access form required by the pallas backends")
 
     def on_wake(self, ctx: Ctx, cs: Dict, bank: Dict
                 ) -> Tuple[Dict, Dict, jnp.ndarray]:

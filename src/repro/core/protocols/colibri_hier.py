@@ -23,8 +23,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.protocols.base import (MOD, NXT_MOD, NXT_WORK_DONE, RESP,
-                                       SLEEP, Protocol)
+from repro.core.protocols.base import (MOD, NXT_MOD, NXT_WORK_DONE, OUT_DONE,
+                                       OUT_GRANT, OUT_NONE, OUT_SLEEP, RESP,
+                                       SLEEP, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -55,7 +56,12 @@ class ColibriHier(Protocol):
             cur_grp=jnp.full((a,), -1, jnp.int32),  # group holding the turn
             turn_srv=jnp.zeros((a,), jnp.int32),    # ops served this turn
             wake_tmr=jnp.zeros((a,), jnp.int32),
-            wake_q=jnp.zeros((a,), jnp.int32),      # flat local-queue to wake
+            # GROUP whose local queue to wake: storing the group id (not
+            # the flat (addr, group) queue id) keeps the value meaningful
+            # under the Pallas kernel's bank tiling — a block-local flat
+            # id would alias another bank's queue once the block offset
+            # is stripped; on_wake rebuilds the flat id from global ids
+            wake_grp=jnp.zeros((a,), jnp.int32),
         )
 
     def on_access(self, ctx, cs, bank):
@@ -67,7 +73,7 @@ class ColibriHier(Protocol):
         ggq, gqhead, gqlen = bank["ggq"], bank["gqhead"], bank["gqlen"]
         g_inq, cur_grp = bank["g_inq"], bank["cur_grp"]
         turn_srv = bank["turn_srv"]
-        wake_tmr, wake_q = bank["wake_tmr"], bank["wake_q"]
+        wake_tmr, wake_grp = bank["wake_tmr"], bank["wake_grp"]
 
         # bank-side: the winning core's group and flat queue id.
         # All bank/queue state writes below are dense over banks (or
@@ -115,7 +121,7 @@ class ColibriHier(Protocol):
         # round-robin fairness at cluster granularity
         exhausted_b = rel_b & (srv_b >= gsz) & (gqlen > 0)
         more_local_b = rel_b & (lqlen[lq_b] > 0) & ~exhausted_b
-        wake_q = jnp.where(more_local_b, lq_b, wake_q)
+        wake_grp = jnp.where(more_local_b, g_b, wake_grp)
         wake_tmr = jnp.where(more_local_b, self.local_delay, wake_tmr)
         cs["msgs"] = cs["msgs"] + more_local_b.sum()  # intra-cluster wake
         turn_srv = jnp.where(more_local_b, srv_b, turn_srv)
@@ -136,7 +142,7 @@ class ColibriHier(Protocol):
             False, mode="drop")
         gqhead = jnp.where(have_next_b, (gqhead + 1) % G, gqhead)
         gqlen = gqlen - have_next_b
-        wake_q = jnp.where(have_next_b, ba * G + next_g_b, wake_q)
+        wake_grp = jnp.where(have_next_b, next_g_b, wake_grp)
         wake_tmr = jnp.where(have_next_b, p.lat + 2, wake_tmr)
         turn_srv = jnp.where(have_next_b, 0, turn_srv)
         cs["msgs"] = cs["msgs"] + 2 * have_next_b.sum()  # x-cluster wake RT
@@ -149,12 +155,91 @@ class ColibriHier(Protocol):
         bank.update(lqbuf=lqbuf, lqhead=lqhead, lqlen=lqlen, ggq=ggq,
                     gqhead=gqhead, gqlen=gqlen, g_inq=g_inq,
                     cur_grp=cur_grp, turn_srv=turn_srv,
-                    wake_tmr=wake_tmr, wake_q=wake_q)
+                    wake_tmr=wake_tmr, wake_grp=wake_grp)
         return cs, bank
+
+    def fused_access(self, fx, bank):
+        # the on_access dense bank updates, restated block-locally: bank
+        # ids come from a local iota over this block's lanes (the flat
+        # (addr, group) queue ids follow from it), and the per-core
+        # grant/enqueue/release effects become OUT_* codes.
+        G, gsz, cap_l = self._geom(fx.p, fx.n)
+        lqbuf, lqhead, lqlen = bank["lqbuf"], bank["lqhead"], bank["lqlen"]
+        ggq, gqhead, gqlen = bank["ggq"], bank["gqhead"], bank["gqlen"]
+        g_inq, cur_grp = bank["g_inq"], bank["cur_grp"]
+        turn_srv = bank["turn_srv"]
+        wake_tmr, wake_grp = bank["wake_tmr"], bank["wake_grp"]
+        a = cur_grp.shape[0]                     # banks in this block
+        ba = jnp.arange(a, dtype=jnp.int32)
+        g_b = jnp.minimum(jnp.minimum(fx.win, fx.n - 1) // gsz, G - 1)
+        lq_b = ba * G + g_b
+        oob_a, oob_lq = a, a * G
+
+        # ---- acquire ----
+        idle_b = cur_grp < 0
+        grant_b = fx.acq_b & idle_b
+        cur_grp = jnp.where(grant_b, g_b, cur_grp)
+        turn_srv = jnp.where(grant_b, 0, turn_srv)
+        enq_b = fx.acq_b & ~idle_b
+        slot_b = (lqhead[lq_b] + lqlen[lq_b]) % cap_l
+        put_lq = jnp.where(enq_b, lq_b, oob_lq)
+        lqbuf = lqbuf.at[put_lq, slot_b].set(fx.win, mode="drop")
+        lqlen = lqlen.at[put_lq].add(1, mode="drop")
+        msgs = enq_b.astype(jnp.int32)           # intra-cluster SuccUpdate
+        reg_b = enq_b & (cur_grp != g_b) & ~g_inq[ba, g_b]
+        gslot_b = (gqhead + gqlen) % G
+        reg_a = jnp.where(reg_b, ba, oob_a)
+        ggq = ggq.at[reg_a, gslot_b].set(g_b, mode="drop")
+        gqlen = gqlen + reg_b
+        g_inq = g_inq.at[reg_a, g_b].set(True, mode="drop")
+        msgs = msgs + 2 * reg_b                  # global registration RT
+
+        # ---- release ----
+        srv_b = turn_srv + 1
+        exhausted_b = fx.rel_b & (srv_b >= gsz) & (gqlen > 0)
+        more_local_b = fx.rel_b & (lqlen[lq_b] > 0) & ~exhausted_b
+        wake_grp = jnp.where(more_local_b, g_b, wake_grp)
+        wake_tmr = jnp.where(more_local_b, self.local_delay, wake_tmr)
+        msgs = msgs + more_local_b               # intra-cluster wake
+        turn_srv = jnp.where(more_local_b, srv_b, turn_srv)
+        re_reg_b = fx.rel_b & (lqlen[lq_b] > 0) & exhausted_b
+        tail_b = (gqhead + gqlen) % G
+        re_reg_a = jnp.where(re_reg_b, ba, oob_a)
+        ggq = ggq.at[re_reg_a, tail_b].set(g_b, mode="drop")
+        gqlen = gqlen + re_reg_b
+        g_inq = g_inq.at[re_reg_a, g_b].set(True, mode="drop")
+        msgs = msgs + 2 * re_reg_b               # re-registration RT
+        end_turn_b = fx.rel_b & ((lqlen[lq_b] == 0) | exhausted_b)
+        have_next_b = end_turn_b & (gqlen > 0)
+        next_g_b = ggq[ba, gqhead]
+        cur_grp = jnp.where(have_next_b, next_g_b, cur_grp)
+        g_inq = g_inq.at[jnp.where(have_next_b, ba, oob_a), next_g_b].set(
+            False, mode="drop")
+        gqhead = jnp.where(have_next_b, (gqhead + 1) % G, gqhead)
+        gqlen = gqlen - have_next_b
+        wake_grp = jnp.where(have_next_b, next_g_b, wake_grp)
+        wake_tmr = jnp.where(have_next_b, fx.p.lat + 2, wake_tmr)
+        turn_srv = jnp.where(have_next_b, 0, turn_srv)
+        msgs = msgs + 2 * have_next_b            # cross-cluster wake RT
+        cur_grp = jnp.where(end_turn_b & ~have_next_b, -1, cur_grp)
+
+        kind = jnp.where(
+            grant_b, OUT_GRANT,
+            jnp.where(enq_b, OUT_SLEEP,
+                      jnp.where(fx.rel_b, OUT_DONE, OUT_NONE))
+        ).astype(jnp.int32)
+        tmr = jnp.full_like(kind, fx.p.lat)
+        bank = dict(bank, lqbuf=lqbuf, lqhead=lqhead, lqlen=lqlen, ggq=ggq,
+                    gqhead=gqhead, gqlen=gqlen, g_inq=g_inq,
+                    cur_grp=cur_grp, turn_srv=turn_srv,
+                    wake_tmr=wake_tmr, wake_grp=wake_grp)
+        return bank, FusedOut(kind=kind, tmr=tmr, msgs=msgs.astype(jnp.int32))
 
     def on_wake(self, ctx, cs, bank):
         G, _, cap_l = self._geom(ctx.p, ctx.n)
-        wake_tmr, wq = bank["wake_tmr"], bank["wake_q"]
+        wake_tmr = bank["wake_tmr"]
+        ba = ctx.ba if ctx.ba is not None else jnp.arange(ctx.a)
+        wq = ba * G + bank["wake_grp"]      # flat local-queue id
         lqbuf, lqhead, lqlen = bank["lqbuf"], bank["lqhead"], bank["lqlen"]
         fire = wake_tmr == 1
         wake_tmr = jnp.maximum(wake_tmr - 1, 0)

@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       RESP, Protocol)
+                                       OUT_DONE, OUT_FAIL, OUT_GRANT,
+                                       OUT_NONE, RESP, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -49,6 +50,21 @@ class SpinLock(Protocol):
         # dense bank update: a winner is either acq or rel, never both
         bank["lock"] = (lock | (ctx.acq_b & ~lock)) & ~ctx.rel_b
         return cs, bank
+
+    def fused_access(self, fx, bank):
+        lock = bank["lock"]
+        got_b = fx.acq_b & ~lock
+        fail_b = fx.acq_b & lock
+        kind = jnp.where(
+            got_b, OUT_GRANT,
+            jnp.where(fail_b, OUT_FAIL,
+                      jnp.where(fx.rel_b, OUT_DONE, OUT_NONE))
+        ).astype(jnp.int32)
+        acq_rt = 2 * fx.p.lat if self.lr_pair else fx.p.lat
+        tmr = jnp.where(fx.acq_b, acq_rt, fx.p.lat).astype(jnp.int32)
+        msgs = (2 * fx.acq_b.astype(jnp.int32)) if self.lr_pair else None
+        bank = dict(bank, lock=(lock | got_b) & ~fx.rel_b)
+        return bank, FusedOut(kind=kind, tmr=tmr, msgs=msgs)
 
 
 @register
@@ -102,3 +118,28 @@ class TicketLock(Protocol):
         cs["nxt"] = jnp.where(is_rel, NXT_WORK_DONE, cs["nxt"])
         bank["next_tkt"], bank["serving"] = next_tkt, serving
         return cs, bank
+
+    # the winner's held ticket is the one per-core value the bank needs,
+    # and the drawn/dropped ticket is the one per-core value it writes
+    fused_core_fields = ("tkt",)
+    fused_xset_fields = ("tkt",)
+
+    def fused_access(self, fx, bank):
+        next_tkt, serving = bank["next_tkt"], bank["serving"]
+        tkt_w = fx.core["tkt"]                    # winner's held ticket
+        draw_b = fx.acq_b & (tkt_w < 0)
+        my_tkt_b = jnp.where(draw_b, next_tkt, tkt_w)
+        next_tkt = next_tkt + draw_b
+        got_b = fx.acq_b & (my_tkt_b == serving)
+        kind = jnp.where(
+            got_b, OUT_GRANT,
+            jnp.where(fx.acq_b, OUT_FAIL,
+                      jnp.where(fx.rel_b, OUT_DONE, OUT_NONE))
+        ).astype(jnp.int32)
+        tmr = jnp.full_like(kind, fx.p.lat)
+        serving = serving + fx.rel_b
+        bank = dict(bank, next_tkt=next_tkt, serving=serving)
+        # acquires record their (kept or drawn) ticket; releases drop it
+        xset = {"tkt": (jnp.where(fx.rel_b, -1, my_tkt_b).astype(jnp.int32),
+                        fx.acq_b | fx.rel_b)}
+        return bank, FusedOut(kind=kind, tmr=tmr, xset=xset)

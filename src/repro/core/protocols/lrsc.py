@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       RESP, Protocol)
+                                       OUT_DONE, OUT_FAIL, OUT_GRANT,
+                                       OUT_NONE, RESP, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -49,3 +50,20 @@ class Lrsc(Protocol):
         cs["polls"] = cs["polls"] + fail.sum()
         bank["resv_core"], bank["resv_valid"] = resv_core, resv_valid
         return cs, bank
+
+    def fused_access(self, fx, bank):
+        resv_core, resv_valid = bank["resv_core"], bank["resv_valid"]
+        # LR: always answered (a taken slot just dooms the later SC)
+        got_resv_b = fx.acq_b & ~resv_valid
+        resv_core = jnp.where(got_resv_b, fx.win, resv_core)
+        # SC: succeeds iff holding the reservation; owner's SC releases it
+        owner_b = fx.rel_b & resv_valid & (resv_core == fx.win)
+        resv_valid = (resv_valid | got_resv_b) & ~owner_b
+        kind = jnp.where(
+            fx.acq_b, OUT_GRANT,
+            jnp.where(owner_b, OUT_DONE,
+                      jnp.where(fx.rel_b, OUT_FAIL, OUT_NONE))
+        ).astype(jnp.int32)
+        tmr = jnp.full_like(kind, fx.p.lat)
+        bank = dict(bank, resv_core=resv_core, resv_valid=resv_valid)
+        return bank, FusedOut(kind=kind, tmr=tmr)

@@ -11,7 +11,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       RESP, SLEEP, Protocol)
+                                       OUT_DONE, OUT_FAIL, OUT_GRANT,
+                                       OUT_NONE, OUT_SLEEP, RESP, SLEEP,
+                                       FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -76,3 +78,36 @@ class LrscWait(Protocol):
             cs["msgs"] = cs["msgs"] + 2 * pend_b.sum()  # WakeUpReq + resp
         bank["qbuf"], bank["qhead"], bank["qlen"] = qbuf, qhead, qlen
         return cs, bank
+
+    def fused_access(self, fx, bank):
+        q_cap = fx.q_cap
+        qbuf, qhead, qlen = bank["qbuf"], bank["qhead"], bank["qlen"]
+        ba = jnp.arange(qbuf.shape[0], dtype=jnp.int32)   # block-local
+        empty_b = qlen == 0
+        full_b = qlen >= q_cap
+        grant_b = fx.acq_b & empty_b
+        enq_b = fx.acq_b & ~empty_b & ~full_b
+        rej_b = fx.acq_b & full_b                # finite-q immediate fail
+        put_b = fx.acq_b & ~full_b
+        slot_b = (qhead + qlen) % q_cap
+        qbuf = qbuf.at[jnp.where(put_b, ba, qbuf.shape[0]), slot_b].set(
+            fx.win, mode="drop")
+        kind = jnp.where(
+            grant_b, OUT_GRANT,
+            jnp.where(enq_b, OUT_SLEEP,
+                      jnp.where(rej_b, OUT_FAIL,
+                                jnp.where(fx.rel_b, OUT_DONE, OUT_NONE)))
+        ).astype(jnp.int32)
+        tmr = jnp.full_like(kind, fx.p.lat)
+        # SCwait: always valid (only the head ever gets a response)
+        qhead = jnp.where(fx.rel_b, (qhead + 1) % q_cap, qhead)
+        qlen = qlen + put_b - fx.rel_b
+        pend_b = fx.rel_b & (qlen > 0)
+        wake_tmr = jnp.where(pend_b, self.wake_delay(fx.p),
+                             bank["wake_tmr"])
+        msgs = None
+        if self.successor_updates:               # SuccUpdate + WakeUpReq RTs
+            msgs = 2 * (enq_b.astype(jnp.int32) + pend_b.astype(jnp.int32))
+        bank = dict(bank, qbuf=qbuf, qhead=qhead, qlen=qlen,
+                    wake_tmr=wake_tmr)
+        return bank, FusedOut(kind=kind, tmr=tmr, msgs=msgs)

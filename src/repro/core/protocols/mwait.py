@@ -9,8 +9,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.protocols.base import (NXT_MOD, NXT_WORK_DONE, RESP, SLEEP,
-                                       Protocol)
+from repro.core.protocols.base import (NXT_MOD, NXT_WORK_DONE, OUT_DONE,
+                                       OUT_GRANT, OUT_NONE, OUT_SLEEP, RESP,
+                                       SLEEP, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -54,3 +55,28 @@ class MwaitLock(Protocol):
         bank["wake_tmr"] = jnp.where(pend_b, p.lat + 2, bank["wake_tmr"])
         bank["qbuf"], bank["qhead"], bank["qlen"] = qbuf, qhead, qlen
         return cs, bank
+
+    def fused_access(self, fx, bank):
+        q_cap = fx.q_cap
+        qbuf, qhead, qlen = bank["qbuf"], bank["qhead"], bank["qlen"]
+        ba = jnp.arange(qbuf.shape[0], dtype=jnp.int32)   # block-local
+        empty_b = qlen == 0
+        grant_b = fx.acq_b & empty_b
+        enq_b = fx.acq_b & ~empty_b
+        slot_b = (qhead + qlen) % q_cap
+        qbuf = qbuf.at[jnp.where(fx.acq_b, ba, qbuf.shape[0]), slot_b].set(
+            fx.win, mode="drop")
+        kind = jnp.where(
+            grant_b, OUT_GRANT,
+            jnp.where(enq_b, OUT_SLEEP,
+                      jnp.where(fx.rel_b, OUT_DONE, OUT_NONE))
+        ).astype(jnp.int32)
+        tmr = jnp.full_like(kind, fx.p.lat)
+        msgs = 2 * enq_b.astype(jnp.int32)               # Mwait setup
+        qhead = jnp.where(fx.rel_b, (qhead + 1) % q_cap, qhead)
+        qlen = qlen + fx.acq_b - fx.rel_b
+        pend_b = fx.rel_b & (qlen > 0)
+        wake_tmr = jnp.where(pend_b, fx.p.lat + 2, bank["wake_tmr"])
+        bank = dict(bank, qbuf=qbuf, qhead=qhead, qlen=qlen,
+                    wake_tmr=wake_tmr)
+        return bank, FusedOut(kind=kind, tmr=tmr, msgs=msgs)

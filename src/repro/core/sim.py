@@ -55,14 +55,54 @@ from repro.core import protocols as proto_registry
 from repro.core import workloads as wl_registry
 from repro.core.metrics import LAT_BINS, LAT_SUB
 from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, NXT_BACKOFF,
-                                       NXT_MOD, NXT_WORK_DONE, P_ACQ, P_REL,
-                                       REQ, RESP, SLEEP, WORK)
+                                       NXT_MOD, NXT_WORK_DONE, OUT_DONE,
+                                       OUT_FAIL, OUT_GRANT, OUT_SLEEP,
+                                       P_ACQ, P_REL, REQ, RESP, SLEEP, WORK)
 from repro.core.workloads.base import (ADDR_FIXED, ADDR_ZIPF, K_BARRIER,
                                        zipf_index)
+from repro.kernels import engine_step
 
 #: the paper's seven protocols (Figs. 3–6); the registry may hold more.
 PROTOCOLS = ("amo", "lrsc", "lrscwait", "colibri",
              "amo_lock", "lrsc_lock", "mwait_lock")
+
+#: execution backends for the engine hot loop.  ``auto`` resolves to the
+#: best backend for the visible devices (accelerator if present, else the
+#: XLA scan path); ``pallas_interpret`` runs the fused Pallas kernel in
+#: interpret mode on CPU — slow, but it exercises the exact kernel
+#: dataflow, which is how the backend-equivalence suite pins the kernel
+#: bit-identical to the scan oracle on CPU-only hosts.
+BACKENDS = ("auto", "xla_cpu", "pallas_gpu", "pallas_tpu",
+            "pallas_interpret")
+
+
+def _has_platform(platform: str) -> bool:
+    try:
+        return len(jax.devices(platform)) > 0
+    except RuntimeError:
+        return False
+
+
+def available_backends() -> tuple:
+    """The subset of :data:`BACKENDS` constructible on this host (the
+    pallas device backends require a matching accelerator)."""
+    avail = {"auto", "xla_cpu", "pallas_interpret"}
+    if _has_platform("gpu"):
+        avail.add("pallas_gpu")
+    if _has_platform("tpu"):
+        avail.add("pallas_tpu")
+    return tuple(b for b in BACKENDS if b in avail)
+
+
+def resolve_backend(backend: str) -> str:
+    """Map ``auto`` onto the concrete backend for the visible devices."""
+    if backend == "auto":
+        if _has_platform("tpu"):
+            return "pallas_tpu"
+        if _has_platform("gpu"):
+            return "pallas_gpu"
+        return "xla_cpu"
+    return backend
 
 #: SimParams fields the engine accepts as traced scalars (sweep axes).
 DYN_FIELDS = ("seed", "n_addrs", "lat", "work", "modify", "backoff",
@@ -99,6 +139,12 @@ class SimParams:
     # path, 1 measures fastest up to 256 cores and ~2 at 1024
     # (EXPERIMENTS.md §Engine-throughput has the ablation).
     unroll: int = 1
+    # Execution backend for the hot loop (see BACKENDS): "auto" picks the
+    # accelerator's fused Pallas engine-step kernel when one is visible
+    # and the XLA scan path otherwise.  Pure execution knob — results are
+    # bit-identical across backends (tests/test_engine_backend.py pins
+    # the full protocol × workload grid).
+    backend: str = "auto"
     n_addrs: int = 1                 # contention: fewer addresses = hotter
     cycles: int = 20_000
     lat: int = 5                     # one-way network latency (cycles)
@@ -154,6 +200,16 @@ class SimParams:
         if not isinstance(self.record_trace, (bool, np.bool_)):
             raise ValueError(
                 f"record_trace must be a bool (got {self.record_trace!r})")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; available backends: "
+                f"{', '.join(available_backends())}")
+        if self.backend not in available_backends():
+            dev = "TPU" if self.backend == "pallas_tpu" else "GPU"
+            raise ValueError(
+                f"backend {self.backend!r} requires a {dev} device and "
+                f"none is visible to jax; available backends: "
+                f"{', '.join(available_backends())}")
         wl = wl_registry.get(self.workload)
         if self.n_addrs < wl.min_addrs:
             raise ValueError(
@@ -323,6 +379,12 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     # did — false at n=1024 past ~2M cycles — so the safe two-stage
     # arbiter kicks in exactly where the old key wrapped.
     key_fits_int32 = p.cycles * (n + 1) + n <= _BIG
+    # execution backend: the fused Pallas engine-step kernel replaces
+    # the arbitration + protocol + histogram stages of the scan body;
+    # everything around it (issue, retire, network, wakeups) is shared
+    bk = resolve_backend(p.backend)
+    use_pallas = bk != "xla_cpu"
+    pl_interpret = bk == "pallas_interpret"
     dense_banks = (a * n <= _DENSE_BANK_ELTS
                    and a * n * max(batch, 1) <= _DENSE_BATCH_ELTS)
     # same dense-vs-scatter choice for the latency histogram accumulator
@@ -459,46 +521,105 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
 
         # ---- bank arbitration: FIFO by arrival stamp among parked ----
         arrived = parked & (st == REQ)
-        if key_fits_int32:
-            # fused lexicographic key, one segment-min (the common case:
-            # the horizon is known at trace time to keep it in int32)
-            bkey = jnp.where(arrived, arr_cyc * (n + 1) + rot, _BIG)
-            if dense_banks:            # few banks: vectorized 2-D min
-                best = jnp.min(jnp.where(addr[None, :] == ba[:, None],
-                                         bkey[None, :], _BIG), axis=1)
-            else:                      # many banks: one segment-min
-                best = jnp.full((a,), _BIG, jnp.int32).at[addr].min(bkey)
-            winner = arrived & (bkey == best[addr])
-            valid_b = best != _BIG
-            rot_w = best % (n + 1)          # key encodes the winner's rot
+        if use_pallas:
+            # fused engine-step kernel (repro.kernels.engine_step):
+            # arbitration + protocol bank update + latency histogram in
+            # one tiled pass over (a, n); the engine scatters the
+            # per-bank outcome codes back to the winning cores below —
+            # exactly the (st, tmr, nxt) writes on_access performs via
+            # masked wheres, so the two paths stay bit-identical
+            # (tests/test_engine_backend.py).
+            fs = engine_step.fused_step(
+                proto, p, dict(s["bank"]),
+                cand_cyc=jnp.where(arrived, arr_cyc, _BIG),
+                rot=rot, addr=addr, phase=phase, acq_start=acq_start,
+                core={f: s["xc"][f] for f in proto.fused_core_fields},
+                cyc=cyc, shift=shift, lat=rp.lat,
+                n=n, a=a, q_cap=q_cap, cycles=p.cycles,
+                interpret=pl_interpret)
+            valid_b, win_core, kind = fs["valid"], fs["win"], fs["kind"]
+            winner = jnp.zeros((n,), bool).at[
+                jnp.where(valid_b, win_core, n)].set(True, mode="drop")
+            parked = parked & ~winner                    # served
+            arr_cyc = jnp.where(winner, -1, arr_cyc)
+            wcs = jnp.minimum(win_core, n - 1)           # gather-safe
+            acq_b = valid_b & (phase[wcs] == P_ACQ)
+            rel_b = valid_b & (phase[wcs] == P_REL)
+            is_acq = winner & (phase == P_ACQ)
+            is_rel = winner & (phase == P_REL)
+            resp_k = ((kind == OUT_GRANT) | (kind == OUT_DONE)
+                      | (kind == OUT_FAIL))
+            rw = jnp.where(resp_k, win_core, n)
+            st = st.at[rw].set(RESP, mode="drop")
+            st = st.at[jnp.where(kind == OUT_SLEEP, win_core, n)].set(
+                SLEEP, mode="drop")
+            tmr = tmr.at[rw].set(fs["tmr"], mode="drop")
+            nxt_code = jnp.where(
+                kind == OUT_GRANT, NXT_MOD,
+                jnp.where(kind == OUT_DONE, NXT_WORK_DONE,
+                          NXT_BACKOFF)).astype(jnp.int32)
+            nxt = s["nxt"].at[rw].set(nxt_code, mode="drop")
+            cs = dict(st=st, tmr=tmr, nxt=nxt,
+                      polls=s["polls"] + fs["polls"],
+                      msgs=(s["msgs"] + 2 * winner.sum() + bar_msgs
+                            + fs["msgs"]),
+                      **{k: s["xc"][k] for k in xc_keys})
+            # protocol per-core writes (e.g. the ticket lock's drawn
+            # ticket) come back as (values, mask) pairs
+            for f in proto.fused_xset_fields:
+                val, msk = fs["xset"][f]
+                cs[f] = cs[f].at[jnp.where(msk, win_core, n)].set(
+                    val, mode="drop")
+            bank = fs["bank"]
+            ctx = proto_registry.Ctx(p=rp, n=n, a=a, q_cap=q_cap,
+                                     is_acq=is_acq, is_rel=is_rel,
+                                     wa=addr, wc=iota, ba=ba,
+                                     win_core=win_core, acq_b=acq_b,
+                                     rel_b=rel_b,
+                                     mod_dur=mod_dur)
         else:
-            # long horizons: chained segment-mins, no overflow anywhere
-            winner, rot_w, valid_b = _fifo_lex_best(arrived, arr_cyc, rot,
-                                                    addr, a)
-        parked = parked & ~winner                    # served
-        arr_cyc = jnp.where(winner, -1, arr_cyc)
-        # decode each bank's winning CORE from its winning rot (the
-        # rotation is affine) — protocols use it to update bank state
-        # densely, O(a) instead of an n-lane scatter per array
-        win_core = jnp.where(valid_b, (rot_w - shift) % n, n)
-        wcs = jnp.minimum(win_core, n - 1)           # gather-safe index
+            if key_fits_int32:
+                # fused lexicographic key, one segment-min (the common
+                # case: the horizon is known at trace time to keep it
+                # in int32)
+                bkey = jnp.where(arrived, arr_cyc * (n + 1) + rot, _BIG)
+                if dense_banks:        # few banks: vectorized 2-D min
+                    best = jnp.min(jnp.where(addr[None, :] == ba[:, None],
+                                             bkey[None, :], _BIG), axis=1)
+                else:                  # many banks: one segment-min
+                    best = jnp.full((a,), _BIG, jnp.int32).at[addr].min(
+                        bkey)
+                winner = arrived & (bkey == best[addr])
+                valid_b = best != _BIG
+                rot_w = best % (n + 1)   # key encodes the winner's rot
+            else:
+                # long horizons: chained segment-mins, no overflow
+                winner, rot_w, valid_b = _fifo_lex_best(arrived, arr_cyc,
+                                                        rot, addr, a)
+            parked = parked & ~winner                    # served
+            arr_cyc = jnp.where(winner, -1, arr_cyc)
+            # decode each bank's winning CORE from its winning rot (the
+            # rotation is affine) — protocols use it to update bank state
+            # densely, O(a) instead of an n-lane scatter per array
+            win_core = jnp.where(valid_b, (rot_w - shift) % n, n)
+            wcs = jnp.minimum(win_core, n - 1)           # gather-safe
 
-        # ---- protocol plugin handles the bank winners ----
-        is_acq = winner & (phase == P_ACQ)
-        is_rel = winner & (phase == P_REL)
-        acq_b = valid_b & (phase[wcs] == P_ACQ)
-        rel_b = valid_b & (phase[wcs] == P_REL)
+            # ---- protocol plugin handles the bank winners ----
+            is_acq = winner & (phase == P_ACQ)
+            is_rel = winner & (phase == P_REL)
+            acq_b = valid_b & (phase[wcs] == P_ACQ)
+            rel_b = valid_b & (phase[wcs] == P_REL)
+            cs = dict(st=st, tmr=tmr, nxt=s["nxt"], polls=s["polls"],
+                      msgs=s["msgs"] + 2 * winner.sum() + bar_msgs,
+                      **{k: s["xc"][k] for k in xc_keys})
+            ctx = proto_registry.Ctx(p=rp, n=n, a=a, q_cap=q_cap,
+                                     is_acq=is_acq, is_rel=is_rel,
+                                     wa=addr, wc=iota, ba=ba,
+                                     win_core=win_core, acq_b=acq_b,
+                                     rel_b=rel_b,
+                                     mod_dur=mod_dur)
+            cs, bank = proto.on_access(ctx, cs, dict(s["bank"]))
         bank_ops = s["bank_ops"] + winner.sum()
-        cs = dict(st=st, tmr=tmr, nxt=s["nxt"], polls=s["polls"],
-                  msgs=s["msgs"] + 2 * winner.sum() + bar_msgs,  # req + resp
-                  **{k: s["xc"][k] for k in xc_keys})
-        ctx = proto_registry.Ctx(p=rp, n=n, a=a, q_cap=q_cap,
-                                 is_acq=is_acq, is_rel=is_rel,
-                                 wa=addr, wc=iota, ba=ba,
-                                 win_core=win_core, acq_b=acq_b,
-                                 rel_b=rel_b,
-                                 mod_dur=mod_dur)
-        cs, bank = proto.on_access(ctx, cs, dict(s["bank"]))
 
         # ---- wakeups (queue-based protocols) ----
         wake_load = jnp.zeros((), jnp.int32)
@@ -519,22 +640,31 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         # form measured +12 µs/cycle at 256 cores).  The grant retires
         # at ``cyc + max(tmr, 1)``; grants whose retirement falls past
         # the horizon are excluded so the histogram mass equals the
-        # retired-op count exactly (the base workload invariant).
-        fut = valid_b & (st[wcs] == RESP) & (cs["nxt"][wcs] == NXT_WORK_DONE)
-        done_cyc = cyc + jnp.maximum(tmr[wcs], 1)
-        fut = fut & (done_cyc < p.cycles)
-        lat_b = done_cyc - acq_start[wcs]
-        lbkt = jnp.clip((LAT_SUB * jnp.log2(
-            lat_b.astype(jnp.float32) + 1.0)).astype(jnp.int32),
-            0, LAT_BINS - 1)
-        if dense_lat:
-            lat_hist = s["lat_hist"] + jnp.sum(
-                (lbkt[None, :] == lbins[:, None]) & fut[None, :], axis=1)
+        # retired-op count exactly (the base workload invariant).  On
+        # the pallas backends the kernel already accumulated this
+        # cycle's rows (OUT_DONE grants are exactly the RESP/WORK_DONE
+        # winners, and on_wake never touches them).
+        if use_pallas:
+            lat_hist = s["lat_hist"] + fs["hist"]
+            lat_max = jnp.maximum(s["lat_max"], fs["lat_max"])
         else:
-            lat_hist = s["lat_hist"].at[jnp.where(fut, lbkt, LAT_BINS)].add(
-                1, mode="drop")
-        lat_max = jnp.maximum(s["lat_max"],
-                              jnp.max(jnp.where(fut, lat_b, 0)))
+            fut = valid_b & (st[wcs] == RESP) & (cs["nxt"][wcs]
+                                                 == NXT_WORK_DONE)
+            done_cyc = cyc + jnp.maximum(tmr[wcs], 1)
+            fut = fut & (done_cyc < p.cycles)
+            lat_b = done_cyc - acq_start[wcs]
+            lbkt = jnp.clip((LAT_SUB * jnp.log2(
+                lat_b.astype(jnp.float32) + 1.0)).astype(jnp.int32),
+                0, LAT_BINS - 1)
+            if dense_lat:
+                lat_hist = s["lat_hist"] + jnp.sum(
+                    (lbkt[None, :] == lbins[:, None]) & fut[None, :],
+                    axis=1)
+            else:
+                lat_hist = s["lat_hist"].at[
+                    jnp.where(fut, lbkt, LAT_BINS)].add(1, mode="drop")
+            lat_max = jnp.maximum(s["lat_max"],
+                                  jnp.max(jnp.where(fut, lat_b, 0)))
         extra = cs["msgs"] - s["msgs"] - 2 * winner.sum()
         resp_load = winner.sum() + w_acc.sum() + extra + wake_load
         sleep_cyc = s["sleep_cyc"] + (st == SLEEP).sum()

@@ -71,7 +71,7 @@ from repro.core.sim import (DYN_FIELDS, _DENSE_BANK_ELTS, SimParams,
 #: workload's compiled program, the trace shape and the scan unroll
 #: factor are baked into the scan body, so all are part of the fingerprint
 STATIC_FIELDS = ("protocol", "workload", "n_cores", "cycles", "q_slots",
-                 "n_groups", "record_trace", "unroll")
+                 "n_groups", "record_trace", "unroll", "backend")
 
 #: default ceiling on points per compiled vmap invocation
 #: (``REPRO_SWEEP_MAX_BATCH`` overrides — read at each ``sweep()`` call,

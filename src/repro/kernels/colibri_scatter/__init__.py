@@ -1,3 +1,4 @@
-from repro.kernels.colibri_scatter.ops import colibri_scatter_add
+from repro.kernels.colibri_scatter.ops import (colibri_histogram,
+                                               colibri_scatter_add)
 
-__all__ = ["colibri_scatter_add"]
+__all__ = ["colibri_histogram", "colibri_scatter_add"]

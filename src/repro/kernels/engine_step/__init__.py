@@ -1,0 +1,14 @@
+"""Fused per-cycle engine step as a Pallas kernel.
+
+One tiled pass over ``(a, n)`` fusing the three bank-side stages of the
+cycle-level engine (``repro.core.sim``): per-bank FIFO segment-min
+arbitration, the protocol's dense bank-centric state update (the
+``Protocol.fused_access`` kernel-fusable form), and completion-latency
+histogram accumulation.  Selected per run by the ``backend`` Spec knob
+(``repro.sync.Spec(backend="pallas_interpret")`` on CPU); the engine's
+``lax.scan`` XLA path is the bit-exactness oracle.
+"""
+from repro.kernels.engine_step.ops import fused_step
+from repro.kernels.engine_step.ref import fused_step_ref
+
+__all__ = ["fused_step", "fused_step_ref"]

@@ -1,0 +1,201 @@
+"""Tiled Pallas kernel for the fused engine step.
+
+One ``pl.pallas_call`` fuses the three bank-side stages of a simulated
+cycle (see ``ref.py`` for the op-by-op oracle):
+
+1. **arbitration** — per-bank FIFO lexicographic (arrival stamp, rotated
+   priority) segment-min over the parked requests, computed as a running
+   two-key min over ``(block_a, block_n)`` tiles of the dense ``(a, n)``
+   request matrix;
+2. **protocol update** — the protocol's :meth:`Protocol.fused_access`
+   dense bank-state update, traced over this block's bank lanes;
+3. **histogram** — the completion-latency histogram rows for this
+   block's retiring grants.
+
+Grid: ``(a // block_a,)`` bank tiles; the core dimension is swept by an
+in-kernel ``fori_loop`` over ``n // block_n`` chunks, so no grid cell
+ever depends on another (safe on parallel GPU grids, trivially correct
+under ``interpret=True`` on CPU).  Bank-state arrays follow the layout
+rule that their leading dim is ``m * a`` for a per-protocol ``m`` (flat
+Colibri queues: m=1; hierarchical local queues: m=n_groups), so every
+bank array blocks cleanly to ``(m * block_a, ...)`` at tile ``at``.
+
+Per-tile partial outputs (histogram rows, [polls, msgs, lat_max] stat
+rows) are reduced OUTSIDE the kernel — cross-tile accumulation through a
+shared output block is exactly the pattern that breaks on parallel
+grids.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.metrics import LAT_BINS, LAT_SUB
+from repro.core.protocols.base import (OUT_DONE, OUT_FAIL, OUT_GRANT,
+                                       OUT_SLEEP, P_ACQ, P_REL, FusedCtx)
+from repro.kernels.engine_step.ref import _BIG, _param_ns
+
+#: number of reduced stat columns per tile: [polls, msgs, lat_max]
+_N_STATS = 3
+
+
+def _kernel(*refs, proto, p, n, block_a, block_n, q_cap, cycles,
+            core_names, bank_names, xset_names):
+    n_core, n_bank, n_xset = len(core_names), len(bank_names), len(xset_names)
+    nin = 6 + n_core + n_bank
+    scal_ref, cand_ref, rot_ref, addr_ref, phase_ref, acq_ref = refs[:6]
+    core_refs = dict(zip(core_names, refs[6:6 + n_core]))
+    bank_refs = dict(zip(bank_names, refs[6 + n_core:nin]))
+    outs = refs[nin:]
+    valid_ref, win_ref, kind_ref, tmr_ref = outs[:4]
+    bank_out = dict(zip(bank_names, outs[4:4 + n_bank]))
+    xv_refs = dict(zip(xset_names, outs[4 + n_bank:4 + n_bank + n_xset]))
+    xm_refs = dict(zip(xset_names,
+                       outs[4 + n_bank + n_xset:4 + n_bank + 2 * n_xset]))
+    stats_ref, hist_ref = outs[-2:]
+
+    scal = scal_ref[...]
+    cyc, shift, lat = scal[0], scal[1], scal[2]
+    # global bank ids of this tile's lanes
+    bl = (pl.program_id(0) * block_a
+          + jax.lax.broadcasted_iota(jnp.int32, (block_a,), 0))
+
+    # ---- stage 1: chunked two-key segment-min over the core dimension.
+    # Running (stamp, rot) pair per bank lane; merging a chunk keeps the
+    # smaller stamp, and on stamp ties the smaller rot — associative, so
+    # chunk order never matters and the result equals the global
+    # lexicographic min (= ref.py's one-shot dense min).
+    def merge(i, carry):
+        run_cyc, run_rot = carry
+        sl = pl.ds(i * block_n, block_n)
+        cand, rot, adr = cand_ref[sl], rot_ref[sl], addr_ref[sl]
+        m = adr[None, :] == bl[:, None]                # (block_a, block_n)
+        c2 = jnp.where(m, cand[None, :], _BIG)
+        t_cyc = jnp.min(c2, axis=1)
+        tie = (c2 == t_cyc[:, None]) & (c2 != _BIG)
+        t_rot = jnp.min(jnp.where(tie, rot[None, :], _BIG), axis=1)
+        better = t_cyc < run_cyc
+        same = t_cyc == run_cyc
+        run_rot = jnp.where(better, t_rot,
+                            jnp.where(same, jnp.minimum(run_rot, t_rot),
+                                      run_rot))
+        return jnp.minimum(run_cyc, t_cyc), run_rot
+
+    init = (jnp.full((block_a,), _BIG, jnp.int32),
+            jnp.full((block_a,), _BIG, jnp.int32))
+    best_cyc, best_rot = jax.lax.fori_loop(0, n // block_n, merge, init)
+    valid = best_cyc != _BIG
+    win = jnp.where(valid, (best_rot - shift) % n, n).astype(jnp.int32)
+    wcs = jnp.minimum(win, n - 1)                      # gather-safe
+
+    # ---- stage 2: protocol dense bank update over this tile
+    phase_w = phase_ref[...][wcs]
+    acq_b = valid & (phase_w == P_ACQ)
+    rel_b = valid & (phase_w == P_REL)
+    fx = FusedCtx(p=_param_ns(p, lat), n=n, a=block_a, q_cap=q_cap,
+                  win=win, acq_b=acq_b, rel_b=rel_b,
+                  core={f: core_refs[f][...][wcs] for f in core_names})
+    bank2, fo = proto.fused_access(
+        fx, {k: bank_refs[k][...] for k in bank_names})
+
+    valid_ref[...] = valid
+    win_ref[...] = win
+    kind_ref[...] = fo.kind
+    tmr_ref[...] = fo.tmr
+    for k in bank_names:
+        bank_out[k][...] = bank2[k]
+    for f in xset_names:
+        val, msk = fo.xset[f]
+        xv_refs[f][...] = val.astype(jnp.int32)
+        xm_refs[f][...] = msk
+
+    # ---- stage 3: completion-latency histogram row for this tile
+    done_cyc = cyc + jnp.maximum(fo.tmr, 1)
+    fut = (fo.kind == OUT_DONE) & (done_cyc < cycles)
+    lat_b = done_cyc - acq_ref[...][wcs]
+    lbkt = jnp.clip((LAT_SUB * jnp.log2(
+        lat_b.astype(jnp.float32) + 1.0)).astype(jnp.int32),
+        0, LAT_BINS - 1)
+    lbins = jax.lax.broadcasted_iota(jnp.int32, (LAT_BINS, block_a), 0)
+    hist_ref[...] = jnp.sum((lbkt[None, :] == lbins) & fut[None, :],
+                            axis=1).astype(jnp.int32)[None, :]
+    polls = (fo.kind == OUT_FAIL).sum()
+    msgs = (fo.msgs.sum() if fo.msgs is not None
+            else jnp.zeros((), jnp.int32))
+    lat_max = jnp.max(jnp.where(fut, lat_b, 0))
+    stats_ref[...] = jnp.stack([polls, msgs, lat_max]).astype(
+        jnp.int32)[None, :]
+
+
+def fused_step_call(proto, p, bank, *, cand_cyc, rot, addr, phase,
+                    acq_start, core, cyc, shift, lat, n, a, q_cap, cycles,
+                    block_a=None, block_n=None, interpret=True):
+    """Launch the tiled kernel; same contract as ``ref.fused_step_ref``."""
+    block_a = a if block_a is None else block_a
+    block_n = n if block_n is None else block_n
+    if a % block_a or n % block_n:
+        raise ValueError(
+            f"tile sizes must divide the extents: a={a} block_a={block_a}, "
+            f"n={n} block_n={block_n}")
+    ga = a // block_a
+    core_names = tuple(proto.fused_core_fields)
+    bank_names = tuple(sorted(bank))
+    xset_names = tuple(proto.fused_xset_fields)
+
+    def _const(shape):                       # same full block at every tile
+        return pl.BlockSpec(shape, lambda at: (0,) * len(shape))
+
+    def _banked(shape):                      # leading dim is m*a -> m*block_a
+        m = shape[0] // a
+        rest = tuple(shape[1:])
+        return pl.BlockSpec((m * block_a,) + rest,
+                            lambda at: (at,) + (0,) * len(rest))
+
+    scal = jnp.stack([jnp.asarray(cyc, jnp.int32),
+                      jnp.asarray(shift, jnp.int32),
+                      jnp.asarray(lat, jnp.int32)])
+    in_specs = ([_const((3,))] + [_const((n,))] * 5
+                + [_const((n,)) for _ in core_names]
+                + [_banked(bank[k].shape) for k in bank_names])
+    lane = pl.BlockSpec((block_a,), lambda at: (at,))
+    row = lambda w: pl.BlockSpec((1, w), lambda at: (at, 0))  # noqa: E731
+    out_specs = ([lane] * 4
+                 + [_banked(bank[k].shape) for k in bank_names]
+                 + [lane] * (2 * len(xset_names))
+                 + [row(_N_STATS), row(LAT_BINS)])
+    out_shape = ([jax.ShapeDtypeStruct((a,), jnp.bool_)]
+                 + [jax.ShapeDtypeStruct((a,), jnp.int32)] * 3
+                 + [jax.ShapeDtypeStruct(bank[k].shape, bank[k].dtype)
+                    for k in bank_names]
+                 + [jax.ShapeDtypeStruct((a,), jnp.int32)
+                    for _ in xset_names]
+                 + [jax.ShapeDtypeStruct((a,), jnp.bool_)
+                    for _ in xset_names]
+                 + [jax.ShapeDtypeStruct((ga, _N_STATS), jnp.int32),
+                    jax.ShapeDtypeStruct((ga, LAT_BINS), jnp.int32)])
+    outs = pl.pallas_call(
+        functools.partial(_kernel, proto=proto, p=p, n=n, block_a=block_a,
+                          block_n=block_n, q_cap=q_cap, cycles=cycles,
+                          core_names=core_names, bank_names=bank_names,
+                          xset_names=xset_names),
+        grid=(ga,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scal, cand_cyc, rot, addr, phase, acq_start,
+      *[core[f] for f in core_names], *[bank[k] for k in bank_names])
+
+    valid, win, kind, tmr = outs[:4]
+    nb, nx = len(bank_names), len(xset_names)
+    bank_new = dict(zip(bank_names, outs[4:4 + nb]))
+    xv = outs[4 + nb:4 + nb + nx]
+    xm = outs[4 + nb + nx:4 + nb + 2 * nx]
+    stats, hist = outs[-2:]
+    return dict(valid=valid, win=win, kind=kind, tmr=tmr, bank=bank_new,
+                xset={f: (v, m) for f, v, m in zip(xset_names, xv, xm)},
+                polls=stats[:, 0].sum(), msgs=stats[:, 1].sum(),
+                hist=hist.sum(axis=0), lat_max=stats[:, 2].max())

@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the fused engine step.
+
+``fused_step_ref`` composes the three bank-side stages the Pallas kernel
+fuses — per-bank FIFO lexicographic-min arbitration over the parked
+requests, the protocol's dense :meth:`Protocol.fused_access` bank update,
+and the completion-latency histogram — as separate XLA ops over the full
+``(a, n)`` extent.  It is both
+
+* the **unfused** ablation path (``fused_step(..., use_kernel=False)``,
+  the EXPERIMENTS.md §Pallas-backend baseline), and
+* the ground truth ``tests/test_engine_kernels.py`` checks the tiled
+  kernel against, input-for-input.
+
+The engine's own ``lax.scan`` path (``core.sim`` with
+``backend="xla_cpu"``) remains the end-to-end bit-exactness oracle; this
+module only restates its bank-side stages in the kernel's dataflow
+(outcome codes out, no per-core writes).
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.metrics import LAT_BINS, LAT_SUB
+from repro.core.protocols.base import (OUT_DONE, OUT_FAIL, P_ACQ, P_REL,
+                                       FusedCtx)
+
+#: int32 sentinel for "no request" (matches ``core.sim._BIG``)
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+def _param_ns(p, lat):
+    """FusedCtx.p namespace: the static SimParams fields with ``lat``
+    (the one traced scalar the fused forms consume) swapped in."""
+    import dataclasses
+    vals = {f.name: getattr(p, f.name) for f in dataclasses.fields(p)}
+    vals["lat"] = lat
+    return SimpleNamespace(**vals)
+
+
+def fused_step_ref(proto, p, bank: Dict, *, cand_cyc, rot, addr, phase,
+                   acq_start, core: Dict, cyc, shift, lat,
+                   n: int, a: int, q_cap: int, cycles: int) -> Dict:
+    """One fused bank-side step, dense ``(a, n)``.
+
+    Inputs: ``cand_cyc`` is the (n,) arrival stamp with ``_BIG`` on the
+    non-contending lanes (``where(parked & st==REQ, arr_cyc, _BIG)``);
+    ``rot``/``addr``/``phase``/``acq_start`` are the engine's (n,) per-
+    core arrays; ``core`` holds the (n,) fields ``proto.fused_core_fields``
+    names; ``cyc``/``shift``/``lat`` may be traced scalars.
+
+    Returns a dict with per-bank ``valid``/``win``/``kind``/``tmr``, the
+    updated ``bank`` pytree, the protocol's ``xset`` per-core writes, and
+    the step's reduced stats: ``polls``, ``msgs``, ``lat_max`` (scalars)
+    and ``hist`` ((LAT_BINS,) counts).
+    """
+    ba = jnp.arange(a, dtype=jnp.int32)
+    # ---- per-bank FIFO lexicographic (arrival stamp, rotated prio) min
+    m = addr[None, :] == ba[:, None]                       # (a, n)
+    c2 = jnp.where(m, cand_cyc[None, :], _BIG)
+    best_cyc = jnp.min(c2, axis=1)                         # (a,)
+    tie = (c2 == best_cyc[:, None]) & (c2 != _BIG)
+    best_rot = jnp.min(jnp.where(tie, rot[None, :], _BIG), axis=1)
+    valid = best_cyc != _BIG
+    # decode the winning CORE from its rot (the rotation is affine)
+    win = jnp.where(valid, (best_rot - shift) % n, n).astype(jnp.int32)
+    wcs = jnp.minimum(win, n - 1)                          # gather-safe
+
+    # ---- protocol dense bank update (kernel-fusable form)
+    phase_w = phase[wcs]
+    acq_b = valid & (phase_w == P_ACQ)
+    rel_b = valid & (phase_w == P_REL)
+    fx = FusedCtx(p=_param_ns(p, lat), n=n, a=a, q_cap=q_cap,
+                  win=win, acq_b=acq_b, rel_b=rel_b,
+                  core={f: v[wcs] for f, v in core.items()})
+    bank, fo = proto.fused_access(fx, bank)
+
+    # ---- completion-latency histogram (bank-side, see core.sim)
+    done_cyc = cyc + jnp.maximum(fo.tmr, 1)
+    fut = (fo.kind == OUT_DONE) & (done_cyc < cycles)
+    lat_b = done_cyc - acq_start[wcs]
+    lbkt = jnp.clip((LAT_SUB * jnp.log2(
+        lat_b.astype(jnp.float32) + 1.0)).astype(jnp.int32),
+        0, LAT_BINS - 1)
+    lbins = jnp.arange(LAT_BINS, dtype=jnp.int32)
+    hist = jnp.sum((lbkt[None, :] == lbins[:, None]) & fut[None, :],
+                   axis=1).astype(jnp.int32)
+    lat_max = jnp.max(jnp.where(fut, lat_b, 0)).astype(jnp.int32)
+
+    polls = (fo.kind == OUT_FAIL).sum().astype(jnp.int32)
+    msgs = (fo.msgs.sum().astype(jnp.int32) if fo.msgs is not None
+            else jnp.zeros((), jnp.int32))
+    return dict(valid=valid, win=win, kind=fo.kind, tmr=fo.tmr,
+                bank=bank, xset=dict(fo.xset),
+                polls=polls, msgs=msgs, hist=hist, lat_max=lat_max)

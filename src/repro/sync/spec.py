@@ -1,7 +1,7 @@
 """``Spec`` — the frozen, validated, declarative simulation spec.
 
 A :class:`Spec` is the public description of ONE simulation point,
-organised into four sub-groups instead of the engine's flat 19-field
+organised into four sub-groups instead of the engine's flat 20-field
 ``SimParams``:
 
 =============  ==========================================================
@@ -12,7 +12,8 @@ organised into four sub-groups instead of the engine's flat 19-field
 ``topology``   the machine: cores, contended addresses/banks, network
                bandwidth, head-of-line blocking factor
 ``costs``      cycle costs and execution: network latency, local work,
-               modify time, horizon, seed, scan unroll, trace flag
+               modify time, horizon, seed, scan unroll, backend, trace
+               flag
 =============  ==========================================================
 
 Construction is deliberately forgiving about *shape* and strict about
@@ -84,6 +85,9 @@ class Costs:
     cycles: int = 20_000      # simulated horizon
     seed: int = 0
     unroll: int = 1           # lax.scan unroll (pure compile knob)
+    backend: str = "auto"     # engine backend (sim.BACKENDS): auto picks
+    #                           the Pallas kernel on accelerators, the
+    #                           XLA scan path on CPU — bit-identical
     record_trace: bool = False  # exact per-completion latency trace
 
 

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.colibri_scatter import colibri_scatter_add
+from repro.kernels.colibri_scatter import (colibri_histogram,
+                                           colibri_scatter_add)
 from repro.kernels.colibri_scatter.ref import scatter_add_ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -52,6 +53,33 @@ def test_colibri_scatter_block_shapes():
     a = colibri_scatter_add(ks, vs, 50, block_t=128, block_bins=32)
     b = colibri_scatter_add(ks, vs, 50, block_t=512, block_bins=128)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+@pytest.mark.parametrize("t,bins", [(100, 7), (1000, 64), (513, 1),
+                                    (2048, 300)])
+def test_colibri_histogram_parity(t, bins):
+    """The paper's benchmark op vs the ref commit and np.bincount."""
+    ks = jax.random.randint(keys(1)[0], (t,), 0, bins)
+    out = np.asarray(colibri_histogram(ks, bins))
+    ref = np.asarray(scatter_add_ref(
+        ks, jnp.ones((t, 1), jnp.float32), bins))[:, 0].astype(np.int32)
+    np.testing.assert_array_equal(out, ref)
+    np.testing.assert_array_equal(
+        out, np.bincount(np.asarray(ks), minlength=bins))
+
+
+def test_trace_latency_hist_matches_engine():
+    """The kernel's product caller: folding the exact recorded waits
+    onto the engine's geometric bins reproduces the in-scan ``lat_hist``
+    accumulator count for count (both see every retirement once)."""
+    from repro.core import metrics
+    from repro.core.sim import SimParams, execute
+    res = execute(SimParams(protocol="colibri", n_cores=32, n_addrs=4,
+                            cycles=4000, record_trace=True))
+    hk = metrics.trace_latency_hist(res)
+    np.testing.assert_array_equal(hk, np.asarray(res["lat_hist"]))
+    np.testing.assert_array_equal(
+        hk, metrics.trace_latency_hist(res, use_kernel=False))
 
 
 # ---------------------------------------------------------------------------
