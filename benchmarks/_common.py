@@ -1,10 +1,14 @@
-"""Shared benchmark plumbing: QUICK mode, timing, row emission.
+"""Shared benchmark plumbing: QUICK mode, timing, provenance, rows.
 
 Every benchmark module used to re-implement three things ad hoc: a
 ``QUICK = int(os.environ.get("REPRO_BENCH_QUICK", ...))`` switch, a
 warm-then-best-of ``_time`` helper, and hand-built JSON-safe row dicts.
 They live here once; row building itself is
-``repro.sync.Result.to_row()``.
+``repro.sync.Result.to_row()``.  :func:`provenance` stamps every
+generated report with the environment that produced it (git sha, jax
+versions, device, timestamp) so numbers in ``reports/*.json`` are
+attributable — ``tests/test_report_schema.py`` enforces the block's
+presence and shape.
 
 ``REPRO_BENCH_QUICK=1`` (the CI smoke rows) selects each benchmark's
 trimmed configuration via :func:`pick`; the full-resolution path is
@@ -12,9 +16,11 @@ byte-for-byte what it always was.
 """
 from __future__ import annotations
 
+import datetime
 import os
+import subprocess
 import time
-from typing import Callable, TypeVar
+from typing import Callable, Dict, TypeVar
 
 T = TypeVar("T")
 
@@ -55,3 +61,38 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> Dict[str, object]:
+    """The environment block stamped into every generated report.
+
+    Keys (all strings unless noted): ``git_sha``, ``jax`` / ``jaxlib``
+    versions, ``device`` kind and ``n_devices`` (int), the resolved
+    engine ``backend``, ``quick`` (bool — whether the rows are the
+    trimmed CI smoke set), and an ISO-8601 UTC ``timestamp``.
+    """
+    import jax
+    import jaxlib
+    from repro.core.sim import resolve_backend
+    devs = jax.devices()
+    return {
+        "git_sha": _git_sha(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "device": devs[0].device_kind if devs else "none",
+        "n_devices": len(devs),
+        "backend": resolve_backend("auto"),
+        "quick": QUICK,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }

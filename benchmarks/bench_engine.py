@@ -23,6 +23,11 @@ compilation cache makes repeated benchmark runs skip compiles anyway):
   × 2 seeds) at 256 cores through ``Study.run()``, reported as points
   per second.  The acceptance bar for the hot-path overhaul is ≥2×
   against ``PRE_PR`` here.
+* **telemetry ablation** — the engine run with the windowed-telemetry
+  knob (``repro.obs``) at windows ∈ {0, 64, 256} on both the scan and
+  Pallas-interpret backends (EXPERIMENTS.md §Telemetry-cost quotes the
+  table).  The acceptance bar: ``telemetry_windows=64`` costs ≤ 10%
+  engine wall time at 1024 cores on both backends.
 
 ``PRE_PR`` holds the baseline measured at commit e6a3f48 (per-cycle
 ``jnp.argsort`` acceptance, fused int32 FIFO key, no unroll, per-key
@@ -53,6 +58,10 @@ GRID_PROTOS = pick(("colibri", "lrscwait", "mwait_lock", "lrsc",
                     "amo_lock"),
                    ("colibri", "lrsc"))
 GRID_SEEDS = pick((0, 1), (0,))
+TELE_WINDOWS = pick((0, 64, 256), (0, 64))
+TELE_CORES = pick((256, 1024), (256,))
+TELE_CYCLES = pick(20_000, 2_000)
+TELE_INTERP_CYCLES = pick(2_000, 500)      # interpret path: shorter horizon
 
 #: pre-overhaul baseline (commit e6a3f48), measured with this module's
 #: exact protocol on the reference box.  Keys match the row labels.
@@ -115,6 +124,25 @@ def rows() -> List[Dict]:
                 "cycles": GRID_CYCLES, "backend": bk, "wall_s": dt,
                 "points_per_s": len(study) / dt,
                 "pre_pr_points_per_s": PRE_PR["grid256_points_per_s"]})
+    # telemetry-cost ablation: windows x cores x backend (w=0 is the
+    # statically-elided off path, the in-row baseline for the overhead)
+    for n in TELE_CORES:
+        for tele_bk, cycles, tag in ((bk, TELE_CYCLES, "tele"),
+                                     (pb, TELE_INTERP_CYCLES,
+                                      "tele_interp")):
+            base_dt = None
+            for w in TELE_WINDOWS:
+                s = Spec(protocol="colibri", n_cores=n, cycles=cycles,
+                         backend=tele_bk, telemetry_windows=w)
+                dt = time_best(lambda: run(s), reps=1 if n >= 1024 else 3)
+                if w == 0:
+                    base_dt = dt
+                out.append({"figure": "engine", "row": f"{tag}_w{w}_{n}c",
+                            "n_cores": n, "cycles": cycles,
+                            "backend": tele_bk, "telemetry_windows": w,
+                            "wall_s": dt,
+                            "core_cycles_per_s": n * cycles / dt,
+                            "overhead_vs_w0": dt / base_dt - 1.0})
     return out
 
 
@@ -147,4 +175,11 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
     for u in UNROLLS:
         head[f"unroll{u}_Mcyc_per_s"] = (
             by[f"unroll_{u}"]["core_cycles_per_s"] / 1e6)
+    # telemetry acceptance: w=64 overhead at the largest measured core
+    # count, on both backends (bar: <= 0.10)
+    ntop = max(TELE_CORES)
+    for tag, label in (("tele", "scan"), ("tele_interp", "interp")):
+        r = by.get(f"{tag}_w64_{ntop}c")
+        if r:
+            head[f"tele_w64_overhead_{label}_{ntop}c"] = r["overhead_vs_w0"]
     return head

@@ -1,0 +1,133 @@
+"""CI benchmark-regression gate: QUICK engine rows vs pinned baselines.
+
+Compares the ``core_cycles_per_s`` of the engine smoke rows (a
+``REPRO_BENCH_QUICK=1 run.py --only engine`` report) against the pinned
+baselines in ``reports/baselines.json`` and exits non-zero when any row
+regresses by more than the threshold (default 25%), so the hot-path
+perf work (PR 3 scatter-free scan, PR 6 fused Pallas step) cannot rot
+silently.  Improvements are reported but never fail.
+
+Usage (what ``.github/workflows/ci.yml`` runs after the engine smoke)::
+
+    REPRO_BENCH_QUICK=1 PYTHONPATH=src:. python benchmarks/run.py \\
+        --only engine --out /tmp/ci-reports
+    PYTHONPATH=src:. python benchmarks/check_trend.py \\
+        --report /tmp/ci-reports/benchmarks.engine.json
+
+Baselines are re-pinned by regenerating ``reports/baselines.json``::
+
+    REPRO_BENCH_QUICK=1 PYTHONPATH=src:. python benchmarks/check_trend.py \\
+        --pin --report <fresh engine report>
+
+The 25% default absorbs normal CI-runner noise (shared vCPUs vary run
+to run); a genuine regression from an engine change (the PR 4 carry
+cliff was 3x) clears it by an order of magnitude.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "reports", "baselines.json")
+DEFAULT_REPORT = os.path.join(REPO, "reports", "benchmarks.engine.json")
+
+#: the gated metric per row kind
+METRICS = ("core_cycles_per_s", "points_per_s")
+
+
+def _engine_rows(report: Dict) -> Dict[str, Dict]:
+    try:
+        rows = report["engine"]["rows"]
+    except KeyError:
+        raise SystemExit("report has no 'engine' benchmark section; "
+                         "generate with run.py --only engine")
+    return {r["row"]: r for r in rows}
+
+
+def _metric(row: Dict):
+    for m in METRICS:
+        if m in row and row[m] is not None:
+            return m, float(row[m])
+    return None, None
+
+
+def pin(report: Dict, baseline_path: str) -> None:
+    """Write the report's engine rows as the new pinned baselines."""
+    rows = {}
+    for name, row in _engine_rows(report).items():
+        m, v = _metric(row)
+        if m:
+            rows[name] = {m: v, "wall_s": row.get("wall_s")}
+    doc = {"_comment": "pinned QUICK engine baselines for "
+                       "benchmarks/check_trend.py (re-pin with --pin)",
+           "provenance": report.get("provenance", {}),
+           "rows": rows}
+    with open(baseline_path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"pinned {len(rows)} baseline rows -> {baseline_path}")
+
+
+def check(report: Dict, baseline: Dict, threshold: float) -> int:
+    """Print a comparison table; return the number of failing rows."""
+    rows = _engine_rows(report)
+    failures = 0
+    print(f"row                     metric             baseline"
+          f"      current    ratio  verdict  (gate: >{threshold:.0%} drop)")
+    for name, pinned in baseline["rows"].items():
+        row = rows.get(name)
+        if row is None:
+            print(f"{name:<23} MISSING from report -> fail")
+            failures += 1
+            continue
+        m, cur = _metric(row)
+        base = pinned.get(m) if m else None
+        if not base:
+            print(f"{name:<23} no shared metric with baseline -> skip")
+            continue
+        ratio = cur / base
+        ok = ratio >= 1.0 - threshold
+        print(f"{name:<23} {m:<18} {base:>12.3e} {cur:>12.3e} "
+              f"{ratio:>8.2f}  {'ok' if ok else 'REGRESSED'}")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--report", default=DEFAULT_REPORT,
+                    help="engine benchmark report to check "
+                         f"(default: {DEFAULT_REPORT})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="pinned baselines "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional drop (default 0.25)")
+    ap.add_argument("--pin", action="store_true",
+                    help="write the report's rows as the new baselines "
+                         "instead of checking")
+    args = ap.parse_args(argv)
+    with open(args.report) as f:
+        report = json.load(f)
+    if args.pin:
+        pin(report, args.baseline)
+        return
+    if not os.path.exists(args.baseline):
+        raise SystemExit(f"no baselines at {args.baseline}; pin them with "
+                         "--pin first")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(report, baseline, args.threshold)
+    if failures:
+        print(f"{failures} row(s) regressed past the "
+              f"{args.threshold:.0%} gate", file=sys.stderr)
+        sys.exit(1)
+    print("benchmark trend ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,29 +6,53 @@ EXPERIMENTS.md quotes. Roofline/dry-run analysis lives in
 
 ``--list`` prints the available benchmark names; ``--only <name>`` runs
 one benchmark (an exact name match wins, otherwise substring match);
-``--out DIR`` redirects the JSON report (default: ``reports/``)::
+``--out DIR`` redirects the JSON report (default: ``reports/``);
+``--profile <name>`` runs one benchmark inside ``jax.profiler.trace()``
+and prints the dump directory (open it with TensorBoard's profile
+plugin or https://ui.perfetto.dev)::
 
     PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --list
     PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --only engine
     PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --out /tmp/r
+    PYTHONPATH=src:benchmarks/.. python benchmarks/run.py --profile engine
+
+Every report carries a top-level ``provenance`` block (git sha, jax
+versions, device, backend, timestamp — ``benchmarks/_common.provenance``)
+and a per-benchmark ``run_report`` with the sweep runner's per-chunk
+compile/execute instrumentation (``repro.obs.RunReport``).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
 
 
 def _run(name, mod):
+    from repro import obs
     t0 = time.perf_counter()
-    rs = mod.rows()
+    with obs.collect() as report:
+        rs = mod.rows()
     dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rs), 1)
     head = mod.headline(rs)
     derived = ";".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
                        for k, v in head.items())
     print(f"{name},{dt_us:.1f},{derived}")
-    return {"rows": rs, "headline": head}
+    if report.n_chunks:
+        print(f"#   sweep: {report.summary()}")
+    return {"rows": rs, "headline": head, "run_report": report.to_dict()}
+
+
+def _select(benches, name):
+    """The benchmark subset a --only/--profile NAME selects."""
+    if name in benches:                   # exact name wins: "summary"
+        return {name: benches[name]}
+    sel = {k: v for k, v in benches.items() if name in k}
+    if not sel:
+        raise SystemExit(f"{name!r} matches none of: " + ", ".join(benches))
+    return sel
 
 
 def main(argv=None) -> None:
@@ -61,31 +85,52 @@ def main(argv=None) -> None:
     ap.add_argument("--out", metavar="DIR", default=None,
                     help="directory for the JSON report "
                          "(default: <repo>/reports)")
+    ap.add_argument("--profile", metavar="NAME", default=None,
+                    help="run ONE benchmark under jax.profiler.trace() "
+                         "and print the dump directory (selects like "
+                         "--only; must match exactly one benchmark)")
     args = ap.parse_args(argv)
     if args.list:
         for name in benches:
             print(name)
         return
-    if args.only:
-        if args.only in benches:          # exact name wins: "--only summary"
-            selected = {args.only: benches[args.only]}
-        else:                             # must not also run fig_summary etc.
-            selected = {k: v for k, v in benches.items() if args.only in k}
-        if not selected:
-            raise SystemExit(f"--only {args.only!r} matches none of: "
-                             + ", ".join(benches))
+    profile_dir = None
+    if args.profile:
+        selected = _select(benches, args.profile)
+        if len(selected) != 1:
+            raise SystemExit(f"--profile {args.profile!r} must match "
+                             f"exactly one benchmark, got: "
+                             + ", ".join(selected))
+    elif args.only:
+        selected = _select(benches, args.only)
     else:
         selected = benches
-
-    results = {}
-    print("name,us_per_call,derived")
-    for name, mod in selected.items():
-        results[name] = _run(name, mod)
 
     out_dir = args.out or os.path.join(os.path.dirname(__file__), "..",
                                        "reports")
     os.makedirs(out_dir, exist_ok=True)
-    suffix = f".{args.only}" if args.only else ""
+
+    from benchmarks._common import provenance
+    results = {"provenance": provenance()}
+    print("name,us_per_call,derived")
+    if args.profile:
+        import jax
+        name = next(iter(selected))
+        profile_dir = os.path.join(out_dir,
+                                   f"profile_{name}_{int(time.time())}")
+        prof_ctx = jax.profiler.trace(profile_dir)
+    else:
+        prof_ctx = contextlib.nullcontext()
+    with prof_ctx:
+        for name, mod in selected.items():
+            results[name] = _run(name, mod)
+    if profile_dir:
+        print(f"# profiler dump -> {profile_dir}")
+        print("#   view: tensorboard --logdir <dir>  (profile plugin), or "
+              "load the .trace.json.gz at https://ui.perfetto.dev")
+
+    picked = args.only or args.profile
+    suffix = f".{picked}" if picked else ""
     out_path = os.path.join(out_dir, f"benchmarks{suffix}.json")
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1, default=str)

@@ -168,6 +168,14 @@ class Protocol:
     def init_bank_state(self, p, a: int, n: int, q_cap: int) -> Dict:
         return {}
 
+    def queue_depth(self, bank: Dict):
+        """(a,) per-bank reservation-queue occupancy, or ``None`` for
+        queueless protocols — the engine's telemetry/trace layers
+        (``repro.obs``) read it once per cycle.  Default: the single
+        FIFO queue's ``qlen``; hierarchical protocols override to sum
+        their per-bank lanes."""
+        return bank.get("qlen")
+
     def init_core_state(self, p, n: int) -> Dict:
         return {}
 

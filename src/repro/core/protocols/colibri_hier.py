@@ -64,6 +64,12 @@ class ColibriHier(Protocol):
             wake_grp=jnp.zeros((a,), jnp.int32),
         )
 
+    def queue_depth(self, bank):
+        # total waiters per bank = its G group-local queues summed
+        # (flat queue id is bank*G + group, so a (a, G) reshape lines up)
+        a = bank["cur_grp"].shape[0]
+        return bank["lqlen"].reshape(a, -1).sum(axis=1)
+
     def on_access(self, ctx, cs, bank):
         p, wa = ctx.p, ctx.wa
         is_acq, is_rel = ctx.is_acq, ctx.is_rel

@@ -61,6 +61,7 @@ from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, NXT_BACKOFF,
 from repro.core.workloads.base import (ADDR_FIXED, ADDR_ZIPF, K_BARRIER,
                                        zipf_index)
 from repro.kernels import engine_step
+from repro.obs.schema import TELE_K, TELE_NSUM, window_len
 
 #: the paper's seven protocols (Figs. 3–6); the registry may hold more.
 PROTOCOLS = ("amo", "lrsc", "lrscwait", "colibri",
@@ -167,6 +168,15 @@ class SimParams:
     n_groups: int = 4                # colibri_hier: clusters of cores
     zipf_skew: int = 100             # 100*s for ADDR_ZIPF streams (s=1.0)
     record_trace: bool = False       # emit (cycles, n) completed-step trace
+    # Windowed in-scan telemetry (repro.obs): > 0 carries a
+    # (telemetry_windows, TELE_K) accumulator through the scan — a
+    # per-window timeseries of core states, bank-access outcomes, queue
+    # depths and NoC traffic, identical across backends and read back by
+    # Result.timeseries().  0 (the default) statically elides the carry:
+    # the trace is bit-identical to the pre-telemetry engine (an extra
+    # written carry is a measured compile cliff — EXPERIMENTS.md
+    # §Metric-cost / §Telemetry-cost).
+    telemetry_windows: int = 0
 
     # Early validation: bad names and impossible sizes fail HERE, with
     # the registry's available names in the message, instead of deep
@@ -177,7 +187,8 @@ class SimParams:
                ("q_slots", 1), ("n_groups", 1), ("unroll", 1),
                ("backoff_exp", 1), ("net_bw", 1), ("lat", 0),
                ("work", 0), ("modify", 0), ("backoff", 0),
-               ("hol_block", 0), ("n_workers", 0), ("zipf_skew", 0))
+               ("hol_block", 0), ("n_workers", 0), ("zipf_skew", 0),
+               ("telemetry_windows", 0))
 
     def __post_init__(self):
         if self.protocol not in proto_registry.names():
@@ -348,6 +359,14 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         w_tmr=jnp.zeros((n,), jnp.int32),
         w_served=jnp.zeros((n,), jnp.int32),
     )
+    # windowed telemetry (repro.obs): the carry exists ONLY when the
+    # knob is on — a Python-level gate, so the off path traces to
+    # exactly the pre-telemetry scan (the PR 4 lesson: one extra
+    # written carry is a compile cliff, not a rounding error)
+    use_tele = p.telemetry_windows > 0
+    if use_tele:
+        state["tele"] = jnp.zeros((p.telemetry_windows, TELE_K), jnp.int32)
+        tele_cw = window_len(p.cycles, p.telemetry_windows)
     xc_keys = tuple(state["xc"])
 
     # ---- closure constants hoisted out of the scan body ----------------
@@ -508,7 +527,6 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                             0)
         budget = jnp.maximum(rp.net_bw - s["resp_prev"] - hol, 1)
         accepted = accept_rotating_fair(all_req, rot, budget, shift=shift)
-        net_stall = s["net_stall"] + (all_req & ~accepted).sum()
         w_acc = w_arr & accepted
         if has_workers:
             w_served = s["w_served"] + w_acc
@@ -516,6 +534,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
             w_tmr = jnp.where(is_worker & (w_tmr == 0), 1, w_tmr)
         else:
             w_served = s["w_served"]
+        stall_now = (all_req & ~accepted).sum()
+        net_stall = s["net_stall"] + stall_now
         parked = s["parked"] | (fresh & accepted)
         arr_cyc = jnp.where(fresh & accepted, cyc, s["arr_cyc"])
 
@@ -621,6 +641,28 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
             cs, bank = proto.on_access(ctx, cs, dict(s["bank"]))
         bank_ops = s["bank_ops"] + winner.sum()
 
+        # ---- telemetry: bank-access outcome tallies (pre-wake) ----
+        # Derived generically instead of per-protocol: on the pallas
+        # path the kernel already emits OUT_* codes per bank; on the
+        # scan path the same four classes are recovered from the (st,
+        # nxt) values on_access just wrote at each bank's winner — the
+        # exact inverse of the engine's OUT_*->(st, nxt) apply mapping
+        # (see core.protocols.base), so both backends tally identically.
+        # O(a) gathers; captured BEFORE on_wake so wake-ups never
+        # shadow this cycle's outcomes.
+        if use_tele:
+            if use_pallas:
+                oc = engine_step.outcome_counts(fs["kind"])
+            else:
+                st_b, nxt_b = cs["st"][wcs], cs["nxt"][wcs]
+                resp_b = valid_b & (st_b == RESP)
+                oc = dict(
+                    grants=(resp_b & (nxt_b == NXT_MOD)).sum(),
+                    retires=(resp_b & (nxt_b == NXT_WORK_DONE)).sum(),
+                    fails=(resp_b & (nxt_b == NXT_BACKOFF)).sum(),
+                    enqueues=(valid_b & (st_b == SLEEP)).sum())
+            st_pre_wake = cs["st"]
+
         # ---- wakeups (queue-based protocols) ----
         wake_load = jnp.zeros((), jnp.int32)
         if proto.uses_queue:
@@ -667,12 +709,25 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                                   jnp.max(jnp.where(fut, lat_b, 0)))
         extra = cs["msgs"] - s["msgs"] - 2 * winner.sum()
         resp_load = winner.sum() + w_acc.sum() + extra + wake_load
-        sleep_cyc = s["sleep_cyc"] + (st == SLEEP).sum()
-        bar_cyc = s["bar_cyc"] + (st == BARWAIT).sum()
-        backoff_cyc = s["backoff_cyc"] + (st == BACKOFF).sum()
-        active_cyc = s["active_cyc"] + ((st != SLEEP) & (st != BARWAIT)
-                                        & ~is_worker).sum()
+        # per-cycle state census, shared by the cumulative stats and the
+        # telemetry row (hoisted so telemetry adds no second n-lane pass)
+        sleep_now = (st == SLEEP).sum()
+        bar_now = (st == BARWAIT).sum()
+        backoff_now = (st == BACKOFF).sum()
+        active_now = ((st != SLEEP) & (st != BARWAIT) & ~is_worker).sum()
+        sleep_cyc = s["sleep_cyc"] + sleep_now
+        bar_cyc = s["bar_cyc"] + bar_now
+        backoff_cyc = s["backoff_cyc"] + backoff_now
+        active_cyc = s["active_cyc"] + active_now
 
+        # ---- end-of-cycle queue depths (telemetry + event trace) ----
+        # per-bank reservation-queue occupancy via the protocol's
+        # queue_depth view (None for queueless protocols -> zeros); read
+        # AFTER on_wake so popped heads are reflected
+        if use_tele or p.record_trace:
+            qd = proto.queue_depth(bank)
+            qd = (jnp.zeros((a,), jnp.int32) if qd is None
+                  else qd.astype(jnp.int32))
         out = dict(st=st, tmr=tmr, addr=addr, phase=phase, nxt=cs["nxt"],
                    pc=pc, bar_cnt=bar_cnt,
                    opc=opc, arr_cyc=arr_cyc, streak=streak, parked=parked,
@@ -686,11 +741,29 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                    backoff_cyc=backoff_cyc,
                    bank_ops=bank_ops, net_stall=net_stall,
                    w_tmr=w_tmr, w_served=w_served)
+        # ---- telemetry accumulation: one window row per cycle ----
+        # cyc // tele_cw is overflow-free (tele_cw is a static ceil
+        # division; no cyc * n_windows product).  Column order follows
+        # obs.schema.TELE_CHANNELS; the final queue_max column is
+        # max-accumulated, everything else summed.
+        if use_tele:
+            wakes = (((st_pre_wake == SLEEP) & (st != SLEEP)).sum()
+                     if proto.uses_queue else jnp.zeros((), jnp.int32))
+            row = jnp.stack([active_now, sleep_now, backoff_now, bar_now,
+                             oc["grants"], oc["retires"], oc["fails"],
+                             oc["enqueues"], wakes, cs["msgs"] - s["msgs"],
+                             stall_now, qd.sum()]).astype(jnp.int32)
+            w = cyc // tele_cw
+            tele = s["tele"].at[w, :TELE_NSUM].add(row)
+            out["tele"] = tele.at[w, TELE_NSUM].max(qd.max())
         # completion trace: which micro-op (pre-advance pc) retired where,
-        # and how long it took from first acquire issue to retirement
+        # how long it took from first acquire issue to retirement, plus
+        # the per-cycle state/queue-depth traces behind Result.events()
+        # and the Perfetto export (repro.obs)
         ev = (dict(step=jnp.where(done, s["pc"], -1).astype(jnp.int32),
                    wait=jnp.where(done, cyc - s["acq_start"],
-                                  -1).astype(jnp.int32))
+                                  -1).astype(jnp.int32),
+                   state=st.astype(jnp.int8), qlen=qd)
               if p.record_trace else None)
         return out, ev
 
@@ -705,6 +778,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     if p.record_trace:
         flat["trace_step"] = trace["step"]
         flat["trace_wait"] = trace["wait"]
+        flat["trace_state"] = trace["state"]
+        flat["trace_qlen"] = trace["qlen"]
     return flat
 
 

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 import warnings
 from functools import partial
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
@@ -71,7 +72,8 @@ from repro.core.sim import (DYN_FIELDS, _DENSE_BANK_ELTS, SimParams,
 #: workload's compiled program, the trace shape and the scan unroll
 #: factor are baked into the scan body, so all are part of the fingerprint
 STATIC_FIELDS = ("protocol", "workload", "n_cores", "cycles", "q_slots",
-                 "n_groups", "record_trace", "unroll", "backend")
+                 "n_groups", "record_trace", "unroll", "backend",
+                 "telemetry_windows")
 
 #: default ceiling on points per compiled vmap invocation
 #: (``REPRO_SWEEP_MAX_BATCH`` overrides — read at each ``sweep()`` call,
@@ -140,7 +142,8 @@ def _batch_sharding():
 
 
 def sweep_iter(configs: Sequence[SimParams],
-               max_batch: Optional[int] = None, energy_fit=None
+               max_batch: Optional[int] = None, energy_fit=None,
+               report=None
                ) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
     """Streaming sweep: yield ``(index, result)`` pairs as chunks
     materialize, in chunk-completion order (fingerprint groups in
@@ -151,21 +154,38 @@ def sweep_iter(configs: Sequence[SimParams],
     does).  This is the engine behind ``repro.sync.Study.stream()``:
     figure scripts consume points while later chunks are still in
     flight instead of waiting on the full grid.
+
+    ``report`` (a :class:`repro.obs.RunReport`) records per-chunk
+    compile/execute wall time and environment facts; when None, the
+    ambient report of an enclosing ``repro.obs.collect()`` block is
+    used (no-op when neither exists).  Instrumentation never changes
+    results — it only reads clocks around the existing dispatch and
+    transfer points.
     """
     if max_batch is None:
         max_batch = int(os.environ.get("REPRO_SWEEP_MAX_BATCH",
                                        DEFAULT_MAX_BATCH))
     if max_batch < 1:
         raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
+    if report is None:
+        from repro.obs import runreport as _runreport
+        report = _runreport.current()            # ambient collect(), or None
     groups: Dict[tuple, List[int]] = {}
     for i, c in enumerate(configs):
         groups.setdefault(_static_key(c), []).append(i)
     sharding, ndev = _batch_sharding()
     pending: List[tuple] = []                    # dispatched, not fetched
+    if report is not None and configs:
+        from repro.core.sim import resolve_backend
+        report.note_env(resolve_backend(configs[0].backend), max_batch)
 
-    def materialize(part, out):
+    def materialize(part, out, rec):
         # one device->host transfer per chunk (the whole result pytree)
+        t0 = time.perf_counter()
         out_np = jax.device_get(out)
+        if rec is not None:
+            # async dispatch drains here, so this wall is execute time
+            rec.execute_s = time.perf_counter() - t0
         for j, i in enumerate(part):             # padding rows never read
             res = {k: v[j] for k, v in out_np.items()}
             yield i, derive_metrics(
@@ -217,16 +237,35 @@ def sweep_iter(configs: Sequence[SimParams],
                 else rep
             if sharding is not None:
                 dyn = jax.device_put(dyn, sharding)
-            pending.append((part, _sweep_group(crep, dyn, len(padded))))
+            t0 = time.perf_counter()
+            cache_before = _sweep_group._cache_size() \
+                if report is not None else 0
+            out = _sweep_group(crep, dyn, len(padded))
+            rec = None
+            if report is not None:
+                # the jitted call traces+compiles synchronously on an
+                # in-process cache miss and returns immediately on a
+                # hit, so dispatch wall ~= compile time when the cache
+                # grew; execution drains at materialize's device_get
+                compiled = _sweep_group._cache_size() > cache_before
+                report.record_chunk(
+                    label=(f"{crep.protocol}/{crep.workload} "
+                           f"{crep.n_cores}c a{crep.n_addrs} "
+                           f"{crep.cycles}cyc"),
+                    points=len(part), batch=len(padded),
+                    compile_s=time.perf_counter() - t0, execute_s=0.0,
+                    compiled=compiled)
+                rec = report.chunks[-1]
+            pending.append((part, out, rec))
             if len(pending) >= window:
                 yield from materialize(*pending.pop(0))
-    for part, out in pending:
-        yield from materialize(part, out)
+    for part, out, rec in pending:
+        yield from materialize(part, out, rec)
 
 
 def sweep_params(configs: Sequence[SimParams],
-                 max_batch: Optional[int] = None, energy_fit=None
-                 ) -> List[Dict[str, np.ndarray]]:
+                 max_batch: Optional[int] = None, energy_fit=None,
+                 report=None) -> List[Dict[str, np.ndarray]]:
     """Run every configuration; returns one result dict per config (same
     keys and values as ``sim.execute``), in input order — including the
     paper metric triple (``jain_fairness`` / ``lat_p95`` /
@@ -247,7 +286,7 @@ def sweep_params(configs: Sequence[SimParams],
     """
     results: List[Dict[str, np.ndarray]] = [None] * len(configs)  # type: ignore
     for i, res in sweep_iter(configs, max_batch=max_batch,
-                             energy_fit=energy_fit):
+                             energy_fit=energy_fit, report=report):
         results[i] = res
     return results
 

@@ -8,7 +8,7 @@ histogram accumulation.  Selected per run by the ``backend`` Spec knob
 (``repro.sync.Spec(backend="pallas_interpret")`` on CPU); the engine's
 ``lax.scan`` XLA path is the bit-exactness oracle.
 """
-from repro.kernels.engine_step.ops import fused_step
+from repro.kernels.engine_step.ops import fused_step, outcome_counts
 from repro.kernels.engine_step.ref import fused_step_ref
 
-__all__ = ["fused_step", "fused_step_ref"]
+__all__ = ["fused_step", "fused_step_ref", "outcome_counts"]

@@ -14,6 +14,10 @@ from __future__ import annotations
 
 from typing import Dict
 
+import jax.numpy as jnp
+
+from repro.core.protocols.base import (OUT_DONE, OUT_FAIL, OUT_GRANT,
+                                       OUT_SLEEP)
 from repro.kernels.engine_step.kernel import fused_step_call
 from repro.kernels.engine_step.ref import fused_step_ref
 
@@ -22,6 +26,21 @@ from repro.kernels.engine_step.ref import fused_step_ref
 #: dimension in 1024-lane chunks (EXPERIMENTS.md §Pallas-backend ablates)
 PREF_BLOCK_A = 256
 PREF_BLOCK_N = 1024
+
+
+def outcome_counts(kind: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Per-cycle tallies of the fused step's ``OUT_*`` outcome codes.
+
+    ``kind`` is the ``(a,)`` per-bank outcome array :func:`fused_step`
+    returns; the four scalars feed the engine's windowed telemetry
+    (``repro.obs``).  By the documented OUT_*->(st, nxt) apply mapping
+    (``core.protocols.base``) these equal the scan path's gathered
+    (st, nxt) tallies exactly, so telemetry stays backend-identical.
+    """
+    return dict(grants=(kind == OUT_GRANT).sum(),
+                retires=(kind == OUT_DONE).sum(),
+                fails=(kind == OUT_FAIL).sum(),
+                enqueues=(kind == OUT_SLEEP).sum())
 
 
 def pick_block(extent: int, pref: int) -> int:

@@ -1,0 +1,101 @@
+"""Shared telemetry/trace schema for the observability subsystem.
+
+One module owns the names and layouts every obs layer agrees on:
+
+* the **windowed telemetry channel layout** — the engine
+  (``core.sim``) accumulates a ``(n_windows, TELE_K)`` int32 array when
+  ``telemetry_windows > 0``; :class:`repro.obs.Timeseries` reads it
+  back by these column names.  The layout is protocol-agnostic: all 9
+  registered protocols fill the same columns (queue columns stay 0 for
+  queueless protocols), so timeseries from different protocols are
+  directly comparable.
+* the **core-state names** used by the event-trace layer
+  (``Result.events()`` / ``obs.perfetto``) to label per-core spans —
+  mirrors of the engine's state codes in ``core.protocols.base``.
+* the **window geometry** helpers shared by the accumulator and the
+  viewers (ceil-division window length, per-window cycle counts), so
+  the view divides by exactly the cycle counts the engine accumulated
+  over.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, REQ, RESP,
+                                       SLEEP, WORK)
+
+#: telemetry channel names, in column order.  All but the last are
+#: per-window **sums** (core-count channels sum one count per cycle, so
+#: dividing by the window's cycle count gives a mean); the final
+#: ``queue_max`` column is max-accumulated.
+#:
+#: ``active``/``sleeping``/``backoff``/``barwait`` — per-cycle core
+#: counts by state (``active`` = non-sleeping, non-barrier, non-worker
+#: cores, exactly the engine's ``active_cyc`` accounting).
+#: ``grants``/``retires``/``fails``/``enqueues`` — bank-access outcome
+#: counts, one per served winner, identical to the fused backend's
+#: ``OUT_GRANT``/``OUT_DONE``/``OUT_FAIL``/``OUT_SLEEP`` codes.
+#: ``wakes`` — cores moved out of SLEEP by a protocol wake-up this
+#: window.  ``msgs``/``net_stall`` — NoC messages and rejected network
+#: requests.  ``queue_sum`` — per-cycle sum of all reservation-queue
+#: depths; ``queue_max`` — max depth seen in the window.
+TELE_CHANNELS = ("active", "sleeping", "backoff", "barwait",
+                 "grants", "retires", "fails", "enqueues", "wakes",
+                 "msgs", "net_stall", "queue_sum", "queue_max")
+
+#: number of telemetry columns; the engine's accumulator is
+#: ``(n_windows, TELE_K)``
+TELE_K = len(TELE_CHANNELS)
+
+#: columns 0..TELE_NSUM-1 are add-accumulated; column TELE_NSUM
+#: (``queue_max``) is max-accumulated
+TELE_NSUM = TELE_K - 1
+
+#: column index by channel name
+TELE_COL: Dict[str, int] = {name: i for i, name in enumerate(TELE_CHANNELS)}
+
+#: engine core-state code -> human/Perfetto label (codes from
+#: ``core.protocols.base``)
+STATE_NAMES: Dict[int, str] = {
+    WORK: "WORK", REQ: "REQ", SLEEP: "SLEEP", MOD: "MOD",
+    BACKOFF: "BACKOFF", RESP: "RESP", BARWAIT: "BARWAIT",
+}
+
+#: states that represent a core making progress (used by viewers to
+#: style spans; SLEEP/BACKOFF/BARWAIT are the waiting states)
+WAIT_STATES = frozenset((SLEEP, BACKOFF, BARWAIT))
+
+
+def window_len(cycles: int, n_windows: int) -> int:
+    """Cycles per telemetry window: ``ceil(cycles / n_windows)``.
+
+    The engine maps cycle ``c`` to window ``c // window_len`` — an
+    overflow-free static division (a ``c * n_windows // cycles`` rule
+    would overflow int32 on long horizons).  The last *used* window may
+    cover fewer cycles; trailing windows stay all-zero.
+    """
+    if n_windows < 1:
+        raise ValueError(f"n_windows must be >= 1 (got {n_windows})")
+    return -(-cycles // n_windows)
+
+
+def windows_used(cycles: int, n_windows: int) -> int:
+    """How many leading windows actually receive samples."""
+    return -(-cycles // window_len(cycles, n_windows))
+
+
+def window_starts(cycles: int, n_windows: int) -> np.ndarray:
+    """(windows_used,) first cycle of each used window."""
+    cw = window_len(cycles, n_windows)
+    return np.arange(windows_used(cycles, n_windows), dtype=np.int64) * cw
+
+
+def window_cycles(cycles: int, n_windows: int) -> np.ndarray:
+    """(windows_used,) number of cycles accumulated into each used
+    window (the divisor for per-cycle means; the tail window is
+    usually shorter)."""
+    cw = window_len(cycles, n_windows)
+    starts = window_starts(cycles, n_windows)
+    return np.minimum(starts + cw, cycles) - starts

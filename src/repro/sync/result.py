@@ -123,6 +123,25 @@ class Result:
         v = self.stats.get("worker_rate")
         return None if v is None else float(v)
 
+    # ---- observability views (repro.obs) --------------------------------
+    def timeseries(self):
+        """The windowed telemetry of this point as a typed
+        :class:`repro.obs.Timeseries` (per-window core-state counts,
+        outcome rates, queue depths, NoC traffic).  Requires the spec to
+        have run with ``telemetry_windows > 0``; raises ``ValueError``
+        otherwise."""
+        from repro.obs.timeseries import Timeseries
+        return Timeseries.from_result(self)
+
+    def events(self):
+        """The event traces of this point as a typed
+        :class:`repro.obs.EventLog` (per-core state spans, retirement
+        completions, per-bank queue-depth trace) — the input of
+        ``repro.obs.perfetto.export``.  Requires ``record_trace=True``;
+        raises ``ValueError`` otherwise."""
+        from repro.obs.events import EventLog
+        return EventLog.from_result(self)
+
     # ---- raw access (porting aid) ---------------------------------------
     def __getitem__(self, key: str) -> Any:
         return self.stats[key]

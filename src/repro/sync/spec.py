@@ -89,6 +89,13 @@ class Costs:
     #                           the Pallas kernel on accelerators, the
     #                           XLA scan path on CPU — bit-identical
     record_trace: bool = False  # exact per-completion latency trace
+    #                           plus per-cycle state/queue-depth traces
+    #                           (Result.events() / obs.perfetto.export)
+    telemetry_windows: int = 0  # windowed in-scan telemetry: > 0 records
+    #                           an (n_windows, k) timeseries of core
+    #                           states / outcomes / queue depths / NoC
+    #                           traffic (Result.timeseries()); 0 = off,
+    #                           bit-identical to the untelemetered engine
 
 
 #: (spec attribute, group class) in declaration order

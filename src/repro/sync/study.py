@@ -126,23 +126,29 @@ class Study:
         return n
 
     # ---- execution ------------------------------------------------------
-    def run(self, max_batch: Optional[int] = None, energy_fit=None
-            ) -> List[Result]:
+    def run(self, max_batch: Optional[int] = None, energy_fit=None,
+            report=None) -> List[Result]:
         """All points through the fingerprint-grouped vmapped sweep;
-        one typed :class:`Result` per point, in :meth:`specs` order."""
+        one typed :class:`Result` per point, in :meth:`specs` order.
+
+        ``report`` (a :class:`repro.obs.RunReport`) collects per-chunk
+        compile/execute instrumentation; an enclosing
+        ``repro.obs.collect()`` block works too."""
         specs = self.specs()
         raw = _sweep.sweep_params([s.to_params() for s in specs],
                                   max_batch=max_batch,
-                                  energy_fit=energy_fit)
+                                  energy_fit=energy_fit, report=report)
         return [Result(spec=s, stats=r) for s, r in zip(specs, raw)]
 
-    def stream(self, max_batch: Optional[int] = None, energy_fit=None
-               ) -> Iterator[Result]:
+    def stream(self, max_batch: Optional[int] = None, energy_fit=None,
+               report=None) -> Iterator[Result]:
         """Yield each point's :class:`Result` as its sweep chunk
         materializes (chunk-completion order; ``result.spec`` identifies
-        the point).  Same results as :meth:`run`, different order."""
+        the point).  Same results as :meth:`run`, different order.
+        ``report`` instruments like :meth:`run`."""
         specs = self.specs()
         for i, r in _sweep.sweep_iter([s.to_params() for s in specs],
                                       max_batch=max_batch,
-                                      energy_fit=energy_fit):
+                                      energy_fit=energy_fit,
+                                      report=report):
             yield Result(spec=specs[i], stats=r)

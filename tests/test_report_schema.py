@@ -1,12 +1,16 @@
 """Schema check for generated benchmark reports: every summary row must
 carry the paper's full metric triple (jain_fairness / lat_p95 /
-energy_pj_per_op) and the trend flags must hold.
+energy_pj_per_op), the trend flags must hold, and every report written
+by ``benchmarks/run.py`` (plus the pinned ``baselines.json``) must
+carry the provenance block (``benchmarks/_common.provenance``) that
+makes its numbers attributable to a git sha / jax version / device.
 
 CI regenerates ``reports/benchmarks.summary.json`` (``run.py --only
 summary`` under ``REPRO_BENCH_QUICK=1``) and then runs this module, so
 the committed full-resolution report and the CI smoke report are held
 to the same schema.  Skips when no summary report has been generated.
 """
+import glob
 import json
 import math
 import os
@@ -15,8 +19,9 @@ import pytest
 
 from repro.core.metrics import METRIC_TRIPLE
 
-REPORT = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "reports", "benchmarks.summary.json")
+REPORTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "reports")
+REPORT = os.path.join(REPORTS_DIR, "benchmarks.summary.json")
 
 
 @pytest.fixture(scope="module")
@@ -50,3 +55,50 @@ def test_summary_trend_flags_hold(summary):
     assert head["pollfree_energy_wins_256"] == 1.0
     assert head["colibri_fair_and_fast_256"] == 1.0
     assert head["min_lrsc_over_colibri_energy_256"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# provenance: every generated report is attributable
+# ---------------------------------------------------------------------------
+
+def _report_paths():
+    return sorted(glob.glob(os.path.join(REPORTS_DIR, "benchmarks*.json"))
+                  + glob.glob(os.path.join(REPORTS_DIR, "baselines.json")))
+
+
+@pytest.mark.parametrize("path", _report_paths() or ["<none>"])
+def test_reports_carry_provenance(path):
+    if path == "<none>":
+        pytest.skip("no reports generated yet")
+    with open(path) as f:
+        doc = json.load(f)
+    assert "provenance" in doc, f"{os.path.basename(path)} lacks provenance"
+    prov = doc["provenance"]
+    for key in ("git_sha", "jax", "jaxlib", "device", "backend",
+                "timestamp"):
+        assert isinstance(prov.get(key), str) and prov[key], (path, key)
+    assert isinstance(prov.get("n_devices"), int) and prov["n_devices"] >= 1
+    assert isinstance(prov.get("quick"), bool)
+    # ISO-8601 UTC, second resolution — "2026-08-08T12:34:56+00:00"
+    assert "T" in prov["timestamp"] and prov["timestamp"].endswith("+00:00")
+
+
+def test_run_reports_have_sweep_instrumentation():
+    """Reports produced by the instrumented driver carry the per-chunk
+    compile/execute RunReport block for each benchmark section."""
+    checked = 0
+    for path in _report_paths():
+        with open(path) as f:
+            doc = json.load(f)
+        for name, section in doc.items():
+            if not isinstance(section, dict) or "run_report" not in section:
+                continue
+            rep = section["run_report"]
+            assert {"backend", "n_chunks", "n_points", "compile_s",
+                    "execute_s", "chunks"} <= set(rep), (path, name)
+            assert rep["n_chunks"] == len(rep["chunks"])
+            for ch in rep["chunks"]:
+                assert ch["points"] >= 1 and ch["compile_s"] >= 0
+            checked += 1
+    if not checked:
+        pytest.skip("no instrumented reports generated yet")

@@ -1,0 +1,288 @@
+"""Observability subsystem (``repro.obs``): windowed telemetry,
+event-trace views, Perfetto export, and instrumented Study runs.
+
+The contract under test, in cost order:
+
+* **off is free** — ``telemetry_windows=0`` (the default) adds no scan
+  carry (statically elided from the jaxpr) and the knob's presence
+  changes no simulation output bit on either backend;
+* **on is observational** — ``telemetry_windows>0`` changes no
+  simulation stat either, it only *adds* the ``tele`` accumulator;
+* **one schema for all protocols** — every registered protocol fills
+  the same 13 channels, and the windowed sums reconcile exactly with
+  the engine's scalar cumulative counters;
+* **backend-agnostic** — the Pallas fused-step path produces the
+  bit-identical ``tele`` array;
+* the typed views (``Result.timeseries()`` / ``Result.events()`` /
+  ``obs.perfetto.export``) expose the paper's headline behaviour:
+  colibri retry-free (zero BACKOFF spans, zero polls) where bare LR/SC
+  retries, on the same workload.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import protocols, sweep, workloads
+from repro.core.protocols.base import BACKOFF, SLEEP
+from repro.core.sim import SimParams, _run, simulate
+from repro.obs import EventLog, Timeseries, schema
+from repro.sync import Result, Spec, Study, run, scenario
+
+SMALL = dict(n_cores=16, cycles=1200, n_addrs=4)
+
+
+def _assert_runs_equal(r0, r1):
+    assert set(r0) == set(r1)
+    for k in sorted(r0):
+        np.testing.assert_array_equal(np.asarray(r0[k]), np.asarray(r1[k]),
+                                      err_msg=f"field {k!r} diverged")
+
+
+# ---------------------------------------------------------------------------
+# off-path: statically elided, bit-identical
+# ---------------------------------------------------------------------------
+
+def _num_carry(**kw):
+    p = SimParams(protocol="colibri", n_cores=16, cycles=400, n_addrs=4,
+                  **kw)
+    jpr = jax.make_jaxpr(lambda: simulate(p))()
+    scans = [e for e in jpr.jaxpr.eqns if e.primitive.name == "scan"]
+    assert len(scans) == 1, "engine must lower to a single lax.scan"
+    return scans[0].params["num_carry"]
+
+
+def test_off_path_carry_statically_elided():
+    """w=0 carries NOTHING extra; w>0 carries exactly the one tele
+    array.  This is the PR 4 lesson — an always-on carry was a 3x
+    compile/runtime cliff."""
+    assert _num_carry(telemetry_windows=64) == \
+        _num_carry(telemetry_windows=0) + 1
+
+
+@pytest.mark.parametrize("backend", ["xla_cpu", "pallas_interpret"])
+def test_telemetry_is_purely_observational(backend):
+    """Same stats bit-for-bit with the accumulator on vs off, on both
+    backends; ``tele`` is strictly additive."""
+    off = dict(_run(SimParams(protocol="colibri", backend=backend,
+                              telemetry_windows=0, **SMALL)))
+    on = dict(_run(SimParams(protocol="colibri", backend=backend,
+                             telemetry_windows=32, **SMALL)))
+    assert "tele" not in off
+    tele = np.asarray(on.pop("tele"))
+    assert tele.shape == (32, schema.TELE_K) and tele.dtype == np.int32
+    _assert_runs_equal(off, on)
+
+
+def test_negative_windows_rejected():
+    with pytest.raises(ValueError):
+        SimParams(protocol="colibri", telemetry_windows=-1, **SMALL)
+
+
+# ---------------------------------------------------------------------------
+# one schema, every protocol: windowed sums == cumulative counters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("protocol", protocols.names())
+def test_channel_sums_reconcile_with_counters(protocol):
+    wl = workloads.get("rmw_loop")
+    st = _run(SimParams(protocol=protocol, workload="rmw_loop",
+                        n_addrs=max(4, wl.min_addrs),
+                        telemetry_windows=16, n_cores=16, cycles=1200))
+    tele = np.asarray(st["tele"])
+    col = schema.TELE_COL
+    sums = tele.sum(axis=0)
+    for channel, counter in (("active", "active_cyc"),
+                             ("sleeping", "sleep_cyc"),
+                             ("backoff", "backoff_cyc"),
+                             ("barwait", "bar_cyc"),
+                             ("fails", "polls"),
+                             ("msgs", "msgs"),
+                             ("net_stall", "net_stall")):
+        assert sums[col[channel]] == int(st[counter]), \
+            f"{protocol}: windowed {channel} != cumulative {counter}"
+    # outcome channels are counts, never negative; unused trailing
+    # windows stay all-zero
+    assert (tele >= 0).all()
+    used = schema.windows_used(1200, 16)
+    assert not tele[used:].any()
+
+
+def test_tele_bit_identical_across_backends():
+    for proto in ("colibri", "lrsc"):
+        t = {}
+        for backend in ("xla_cpu", "pallas_interpret"):
+            st = _run(SimParams(protocol=proto, backend=backend,
+                                telemetry_windows=24, **SMALL))
+            t[backend] = np.asarray(st["tele"])
+        np.testing.assert_array_equal(
+            t["xla_cpu"], t["pallas_interpret"],
+            err_msg=f"{proto}: tele diverged across backends")
+
+
+# ---------------------------------------------------------------------------
+# window geometry
+# ---------------------------------------------------------------------------
+
+def test_window_geometry():
+    assert schema.window_len(1000, 64) == 16       # ceil(1000/64)
+    assert schema.windows_used(1000, 64) == 63     # 63*16 = 1008 >= 1000
+    assert schema.window_cycles(1000, 64).sum() == 1000
+    assert schema.window_cycles(1000, 64)[-1] == 1000 - 62 * 16
+    assert schema.window_starts(1000, 64)[0] == 0
+    # degenerate shapes
+    assert schema.window_len(10, 64) == 1
+    assert schema.windows_used(10, 64) == 10
+    with pytest.raises(ValueError):
+        schema.window_len(100, 0)
+
+
+# ---------------------------------------------------------------------------
+# Spec / sweep routing
+# ---------------------------------------------------------------------------
+
+def test_spec_routes_telemetry_windows():
+    s = Spec(protocol="colibri", telemetry_windows=48)
+    assert s.costs.telemetry_windows == 48
+    assert s.to_params().telemetry_windows == 48
+    assert Spec.from_json(s.to_json()) == s
+    assert s.replace(telemetry_windows=0).to_params().telemetry_windows == 0
+
+
+def test_telemetry_windows_is_a_static_sweep_field():
+    """w=0 vs w>0 compile to different programs (the carry differs) —
+    they must never share one vmapped trace."""
+    assert "telemetry_windows" in sweep.STATIC_FIELDS
+    base = dict(protocol="colibri", **SMALL)
+    k0 = sweep._static_key(SimParams(telemetry_windows=0, **base))
+    k64 = sweep._static_key(SimParams(telemetry_windows=64, **base))
+    assert k0 != k64
+
+
+# ---------------------------------------------------------------------------
+# Timeseries view
+# ---------------------------------------------------------------------------
+
+def _contended(**kw):
+    return Spec(workload="zipf_histogram", n_cores=32, cycles=1500,
+                record_trace=True, telemetry_windows=25,
+                **scenario("zipf_histogram")).replace(**kw)
+
+
+def test_timeseries_view():
+    r = run(_contended(protocol="colibri"))
+    ts = r.timeseries()
+    assert isinstance(ts, Timeseries)
+    assert ts.n_windows == 25 and ts.cycles == 1500
+    assert ts.tele.shape == (25, schema.TELE_K)
+    # core-census channels can never exceed the core count per cycle
+    assert (ts.per_cycle("active") <= ts.n_cores).all()
+    assert (ts.active_cores + ts.sleeping_cores <= ts.n_cores).all()
+    # colibri on a contended workload: sleeps happen, retries never
+    assert ts.counts("enqueues").sum() > 0
+    assert ts.counts("backoff").sum() == 0
+    assert ts.counts("retires").sum() > 0
+    assert ts.queue_depth_max.max() > 0
+    assert (ts.queue_depth_mean <= ts.queue_depth_max).all()
+    # per-cycle means are undefined for the max-accumulated column
+    with pytest.raises(ValueError):
+        ts.per_cycle("queue_max")
+    json.dumps(ts.to_dict())                       # JSON-clean
+
+
+def test_timeseries_requires_the_knob():
+    r = run(Spec(protocol="colibri", n_cores=16, cycles=400))
+    with pytest.raises(ValueError, match="telemetry_windows"):
+        r.timeseries()
+
+
+# ---------------------------------------------------------------------------
+# EventLog / Perfetto: the paper's contrast, visibly
+# ---------------------------------------------------------------------------
+
+def test_events_retry_contrast_and_perfetto(tmp_path):
+    """On one zipf_histogram run, colibri must show ZERO retry
+    (BACKOFF) spans and zero polls while lrsc shows retry spans — the
+    acceptance contrast, both in the typed view and in the exported
+    Perfetto JSON."""
+    from repro import obs
+    logs = {}
+    for proto in ("colibri", "lrsc"):
+        r = run(_contended(protocol=proto))
+        log = r.events()
+        assert isinstance(log, EventLog)
+        logs[proto] = (r, log)
+    r_c, log_c = logs["colibri"]
+    r_l, log_l = logs["lrsc"]
+    assert log_c.span_counts(BACKOFF).sum() == 0 and r_c.polls == 0
+    assert log_c.span_counts(SLEEP).sum() > 0
+    assert log_l.span_counts(BACKOFF).sum() > 0 and r_l.polls > 0
+    # spans()/completions() agree with the census
+    assert log_c.time_in_state(SLEEP).sum() == \
+        sum(s.length for s in log_c.spans(states=(SLEEP,)))
+    comp = log_c.completions()
+    assert len(comp["cycle"]) > 0 and (comp["wait"] >= 0).all()
+    # Perfetto export: valid Chrome-trace JSON with span/counter/meta
+    # events; lrsc's file must contain BACKOFF spans, colibri's none
+    for proto, (r, _) in logs.items():
+        path = obs.perfetto.export(r, tmp_path / f"{proto}.json")
+        with open(path) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        assert {e["ph"] for e in evs} >= {"X", "M"}
+        backoffs = [e for e in evs
+                    if e["ph"] == "X" and e["name"] == "BACKOFF"]
+        assert bool(backoffs) == (proto == "lrsc")
+
+
+def test_events_requires_record_trace():
+    r = run(Spec(protocol="colibri", n_cores=16, cycles=400))
+    with pytest.raises(ValueError, match="record_trace"):
+        r.events()
+
+
+# ---------------------------------------------------------------------------
+# Study integration + RunReport instrumentation
+# ---------------------------------------------------------------------------
+
+def test_study_carries_telemetry_and_runreport():
+    from repro import obs
+    st = Study(protocol="colibri", n_cores=16, n_addrs=4, cycles=800,
+               telemetry_windows=8).grid(lat=[3, 5])
+    with obs.collect() as report:
+        results = st.run()
+    assert len(results) == 2
+    for r in results:
+        ts = r.timeseries()
+        assert ts.tele.shape == (8, schema.TELE_K)
+        assert ts.counts("active").sum() == int(r.stats["active_cyc"])
+    # the ambient report saw the sweep: chunks, points, env, timings
+    assert report.n_chunks >= 1 and report.n_points == 2
+    assert report.backend == "xla_cpu"
+    assert report.compile_s >= 0 and report.execute_s >= 0
+    assert "chunk" in report.summary()
+    json.dumps(report.to_dict())
+    # collect() restores the previous ambient report on exit
+    assert obs.current() is None
+
+
+def test_runreport_explicit_argument():
+    from repro.obs import RunReport
+    rep = RunReport()
+    st = Study(protocol="lrsc", n_cores=16, n_addrs=4, cycles=600) \
+        .grid(lat=[3, 5])
+    st.run(report=rep)
+    assert rep.n_points == 2 and rep.n_chunks >= 1
+    labels = [c.label for c in rep.chunks]
+    assert any("lrsc" in lb for lb in labels)
+
+
+def test_result_to_row_unaffected_by_telemetry():
+    """Report rows (to_row) stay scalar — the tele array must not leak
+    into benchmark JSON rows."""
+    r = run(Spec(protocol="colibri", n_cores=16, cycles=400,
+                 telemetry_windows=8))
+    row = r.to_row()
+    assert "tele" not in row
+    json.dumps(row)
