@@ -46,6 +46,23 @@ def time_best(fn: Callable[[], object], reps: int = 3) -> float:
     return best
 
 
+def time_median(fn: Callable[[], object], reps: int = 3) -> float:
+    """Median-of-``reps`` wall seconds for ``fn()``, after one untimed
+    warm call.  The QUICK CI rows use this instead of :func:`time_best`:
+    best-of-N over the short smoke horizons is an order statistic that a
+    single lucky scheduler slot can swing, which made the
+    ``check_trend.py`` gate flaky on shared runners — the median moves
+    only when the *typical* run moves."""
+    fn()
+    ts = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
 def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
     """(result, seconds_per_call) with block_until_ready semantics."""
     import jax

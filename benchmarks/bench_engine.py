@@ -42,9 +42,13 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks._common import pick, time_best
+from benchmarks._common import QUICK, pick, time_best, time_median
 from repro.core.sim import resolve_backend
 from repro.sync import Spec, Study, run
+
+#: QUICK rows gate CI through check_trend.py; median-of-N flakes far
+#: less than best-of-N on the short smoke horizons (see _common)
+_time = time_median if QUICK else time_best
 
 ENGINE_CYCLES = pick(20_000, 2_000)
 ENGINE_CORES = pick((64, 256, 1024, 4096), (64, 256))
@@ -96,7 +100,7 @@ def rows() -> List[Dict]:
     out: List[Dict] = []
     for n in ENGINE_CORES:
         s = Spec(protocol="colibri", n_cores=n, cycles=ENGINE_CYCLES)
-        dt = time_best(lambda: run(s), reps=1 if n >= 1024 else 3)
+        dt = _time(lambda: run(s), reps=1 if n >= 1024 else 3)
         label = f"engine_{n}c"
         out.append({"figure": "engine", "row": label, "n_cores": n,
                     "cycles": ENGINE_CYCLES, "backend": bk, "wall_s": dt,
@@ -105,21 +109,21 @@ def rows() -> List[Dict]:
     for u in UNROLLS:
         s = Spec(protocol="colibri", n_cores=256, cycles=ENGINE_CYCLES,
                  unroll=u)
-        dt = time_best(lambda: run(s))
+        dt = _time(lambda: run(s))
         out.append({"figure": "engine", "row": f"unroll_{u}", "n_cores": 256,
                     "cycles": ENGINE_CYCLES, "backend": bk, "wall_s": dt,
                     "core_cycles_per_s": 256 * ENGINE_CYCLES / dt})
     pb = _pallas_backend()
     s = Spec(protocol="colibri", n_cores=256, cycles=PAIR_CYCLES)
-    dt_x = time_best(lambda: run(s.replace(backend="xla_cpu")), reps=1)
-    dt_p = time_best(lambda: run(s.replace(backend=pb)), reps=1)
+    dt_x = _time(lambda: run(s.replace(backend="xla_cpu")), reps=1)
+    dt_p = _time(lambda: run(s.replace(backend=pb)), reps=1)
     out.append({"figure": "engine", "row": "backend_pair_256c",
                 "n_cores": 256, "cycles": PAIR_CYCLES,
                 "backend": f"xla_cpu_vs_{pb}", "wall_s": dt_x,
                 "wall_s_xla": dt_x, "wall_s_pallas": dt_p,
                 "pallas_over_xla": dt_p / dt_x})
     study = _grid_study()
-    dt = time_best(lambda: study.run(), reps=1)
+    dt = _time(lambda: study.run(), reps=1)
     out.append({"figure": "engine", "row": "grid256", "n_points": len(study),
                 "cycles": GRID_CYCLES, "backend": bk, "wall_s": dt,
                 "points_per_s": len(study) / dt,
@@ -134,7 +138,7 @@ def rows() -> List[Dict]:
             for w in TELE_WINDOWS:
                 s = Spec(protocol="colibri", n_cores=n, cycles=cycles,
                          backend=tele_bk, telemetry_windows=w)
-                dt = time_best(lambda: run(s), reps=1 if n >= 1024 else 3)
+                dt = _time(lambda: run(s), reps=1 if n >= 1024 else 3)
                 if w == 0:
                     base_dt = dt
                 out.append({"figure": "engine", "row": f"{tag}_w{w}_{n}c",

@@ -1,0 +1,127 @@
+"""Fault-tolerance benchmark: liveness and graceful degradation under
+injected faults (``repro.faults``).
+
+Three measurements, all simulation *outcomes* (deterministic — no wall
+clocks, so rows are exactly reproducible):
+
+* **liveness contrast** — every protocol under an adversarial owner
+  kill (``kill_holder=1``: the cores that die are the ones holding the
+  reservation/lock), with and without the reservation watchdog.  The
+  headline counts protocols that sustain forward progress
+  (``progress_ok``) with recovery enabled, and protocols whose
+  watchdog-off run is *detected* as deadlocked (``halt_cyc >= 0`` — the
+  run always completes and reports; it never hangs).  ``amo`` is the
+  control: direct AMOs hold nothing, so kills never land and both
+  variants trivially stay live.
+* **message-drop degradation curve** — throughput of the sleep-based
+  protocols as the NoC Bernoulli drop rate rises (lost requests AND
+  lost wakeups), watchdog on: the curve should degrade gracefully, not
+  cliff — every lost wakeup is eventually recovered by redelivery.
+* **watchdog-latency ablation** — the recovery knob itself:
+  ``watchdog_cyc`` from "off" (detected deadlock) through aggressive to
+  conservative, under the same owner kill.
+
+EXPERIMENTS.md §Fault-tolerance quotes the table;
+``REPRO_BENCH_QUICK=1`` trims protocols/horizons for the CI smoke row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from benchmarks._common import pick
+from repro.faults import FaultPlan
+from repro.sync import Spec, run
+
+CORES = pick(64, 32)
+CYCLES = pick(12_000, 6_000)
+ADDRS = 4
+KILLS = 2
+KILL_CYC = 500
+WD = 64
+PROG = 600
+
+#: liveness-contrast protocol set (full = the whole registry; QUICK
+#: drops the slow-trickle spin locks whose detected halt needs a long
+#: horizon)
+PROTOCOLS = pick(("lrscwait", "colibri", "colibri_hier", "mwait_lock",
+                  "lrsc", "lrsc_lock", "amo_lock", "ticket_lock", "amo"),
+                 ("lrscwait", "colibri_hier", "mwait_lock", "lrsc"))
+DROP_PROTOS = pick(("lrscwait", "colibri", "mwait_lock"),
+                   ("lrscwait",))
+DROPS = pick((0, 50, 100, 200, 400), (0, 200))      # basis points / 10k
+WD_SET = pick((0, 32, 64, 128, 256), (0, 64))
+
+#: owner-kill plan (watchdog_cyc varies per row)
+_KILL = FaultPlan(n_kill=KILLS, kill_cyc=KILL_CYC, kill_holder=1,
+                  watchdog_cyc=WD, progress_cyc=PROG)
+
+
+def _spec(proto: str, fp: FaultPlan) -> Spec:
+    return Spec(protocol=proto, n_cores=CORES, n_addrs=ADDRS,
+                cycles=CYCLES, faults=fp)
+
+
+def rows() -> List[Dict]:
+    out: List[Dict] = []
+    # ---- liveness contrast: owner kill, watchdog on vs off --------------
+    for proto in PROTOCOLS:
+        healthy = run(Spec(protocol=proto, n_cores=CORES, n_addrs=ADDRS,
+                           cycles=CYCLES))
+        for tag, fp in (("wd", _KILL),
+                        ("nowd", dataclasses.replace(_KILL,
+                                                     watchdog_cyc=0))):
+            r = run(_spec(proto, fp))
+            out.append(r.to_row(
+                figure="faults", row=f"kill_{tag}_{proto}",
+                watchdog_cyc=fp.watchdog_cyc, n_kill=KILLS,
+                healthy_throughput=healthy.throughput,
+                throughput_retention=(r.stats["survivor_throughput"]
+                                      / healthy.throughput
+                                      if healthy.throughput else 0.0)))
+    # ---- message-drop degradation curve ---------------------------------
+    for proto in DROP_PROTOS:
+        base_tp = None
+        for bp in DROPS:
+            fp = FaultPlan(msg_drop_bp=bp, watchdog_cyc=WD,
+                           progress_cyc=PROG)
+            r = run(_spec(proto, fp))
+            if bp == 0:
+                base_tp = r.throughput
+            out.append(r.to_row(
+                figure="faults", row=f"drop_{bp}bp_{proto}",
+                msg_drop_bp=bp, watchdog_cyc=WD,
+                throughput_retention=(r.throughput / base_tp
+                                      if base_tp else 0.0)))
+    # ---- watchdog-latency ablation (lrscwait, owner kill) ---------------
+    for wd in WD_SET:
+        r = run(_spec("lrscwait",
+                      dataclasses.replace(_KILL, watchdog_cyc=wd)))
+        out.append(r.to_row(figure="faults", row=f"wd_{wd}_lrscwait",
+                            watchdog_cyc=wd, n_kill=KILLS))
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    by = {r["row"]: r for r in rs}
+    head: Dict[str, float] = {}
+    # liveness: how many protocols survive the owner kill with the
+    # watchdog, and how many watchdog-off runs are DETECTED as halted
+    # (amo is the no-holder control and is exempt from detection)
+    live = sum(bool(by[f"kill_wd_{p}"]["progress_ok"]) for p in PROTOCOLS)
+    detected = sum(not by[f"kill_nowd_{p}"]["progress_ok"]
+                   for p in PROTOCOLS if p != "amo")
+    head["protocols_live_with_watchdog"] = float(live)
+    head["protocols_total"] = float(len(PROTOCOLS))
+    head["deadlocks_detected_without_watchdog"] = float(detected)
+    head["deadlockable_protocols"] = float(
+        len([p for p in PROTOCOLS if p != "amo"]))
+    for p in ("lrscwait", "colibri_hier"):
+        r = by.get(f"kill_wd_{p}")
+        if r:
+            head[f"kill_wd_retention_{p}"] = r["throughput_retention"]
+    top = max(DROPS)
+    for p in DROP_PROTOS:
+        head[f"drop{top}bp_retention_{p}"] = (
+            by[f"drop_{top}bp_{p}"]["throughput_retention"])
+    return head

@@ -59,9 +59,10 @@ def main(argv=None) -> None:
     from repro.sync import enable_persistent_cache
     enable_persistent_cache()        # repeat runs skip XLA recompiles
     from benchmarks import (bench_area, bench_energy, bench_engine,
-                            bench_histogram, bench_interference,
-                            bench_locks, bench_queue, bench_scatter_kernel,
-                            bench_sweep, bench_workloads, fig_summary)
+                            bench_faults, bench_histogram,
+                            bench_interference, bench_locks, bench_queue,
+                            bench_scatter_kernel, bench_sweep,
+                            bench_workloads, fig_summary)
     benches = {
         "summary": fig_summary,
         "fig3_histogram": bench_histogram,
@@ -74,6 +75,7 @@ def main(argv=None) -> None:
         "sweep_speedup": bench_sweep,
         "workloads_grid": bench_workloads,
         "engine": bench_engine,
+        "faults": bench_faults,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", metavar="NAME", default=None,

@@ -42,6 +42,13 @@ NXT_WORK_DONE, NXT_MOD, NXT_BACKOFF = 0, 1, 2
 # OUT_FAIL -> RESP/NXT_BACKOFF (and one poll), OUT_SLEEP -> SLEEP with
 # the timer untouched, OUT_NONE -> no winner / no core-side effect.
 OUT_NONE, OUT_GRANT, OUT_DONE, OUT_FAIL, OUT_SLEEP = 0, 1, 2, 3, 4
+# recovery outcome codes emitted by ``on_timeout`` (the reservation
+# watchdog, repro.faults): OUT_EVICT — a dead owner was evicted and the
+# resource handed on; OUT_REDELIVER — a lost wakeup was re-sent to a
+# live sleeper.  Both are bank-side events (no per-core apply; the
+# evicted core is dead and the redelivered one wakes through the normal
+# on_wake path), counted into the ``recoveries`` stat by the engine.
+OUT_EVICT, OUT_REDELIVER = 5, 6
 
 
 def mset(arr, idx, mask, val):
@@ -217,3 +224,59 @@ class Protocol:
         cs["tmr"] = jnp.where(woken, ctx.mod_dur, cs["tmr"])
         bank["wake_tmr"] = wake_tmr
         return cs, bank, (wake_tmr == 1).sum()
+
+    # ---- fault recovery (repro.faults) ----------------------------------
+    def held(self, bank: Dict):
+        """(a,) bool — which banks are currently *held* (a reservation,
+        lock or turn is outstanding, so a dead owner wedges the bank).
+        ``None`` (the default) means the protocol has no held state and
+        can never get stuck — the engine then skips the watchdog
+        entirely (amo: every access commits at the bank)."""
+        return None
+
+    def on_timeout(self, ctx: Ctx, cs: Dict, bank: Dict,
+                   stuck_b: jnp.ndarray, killed: jnp.ndarray,
+                   owner: jnp.ndarray) -> Tuple[Dict, Dict, jnp.ndarray]:
+        """Reservation-watchdog recovery: called once per cycle (only
+        when the plan arms ``watchdog_cyc``) with ``stuck_b`` (a,) —
+        banks held with no service progress for ``watchdog_cyc`` cycles
+        — the permanent-kill mask ``killed`` (n,) and the engine-tracked
+        last grantee ``owner`` (a,; ``n`` = unknown).  Returns
+        ``(cs, bank, kind)`` with ``kind`` (a,) an OUT_EVICT /
+        OUT_REDELIVER / OUT_NONE code per bank.  Default: no recovery
+        (the watchdog observes but cannot act)."""
+        return cs, bank, jnp.zeros((ctx.a,), jnp.int32)
+
+
+class FifoQueueRecovery:
+    """``on_timeout`` for the single-FIFO sleep protocols (lrscwait /
+    colibri / mwait_lock), where the queue head IS the current owner:
+    a stuck bank whose head core is permanently dead is evicted (head
+    advances; the reservation passes to the next waiter via a normal
+    wake), and a stuck bank whose head is alive but asleep had its
+    wakeup lost — re-send it.  Mixin over :class:`Protocol` subclasses
+    exposing ``qbuf``/``qhead``/``qlen``/``wake_tmr`` bank state and a
+    ``wake_delay(p)`` policy."""
+
+    def held(self, bank):
+        return bank["qlen"] > 0
+
+    def on_timeout(self, ctx, cs, bank, stuck_b, killed, owner):
+        q_cap, n = ctx.q_cap, ctx.n
+        qhead, qlen = bank["qhead"], bank["qlen"]
+        head = bank["qbuf"][ctx.ba, qhead]
+        head_dead = (head >= 0) & killed[jnp.clip(head, 0, n - 1)]
+        evict_b = stuck_b & head_dead
+        qhead = jnp.where(evict_b, (qhead + 1) % q_cap, qhead)
+        qlen = qlen - evict_b
+        redeliver_b = stuck_b & ~head_dead
+        # hand the reservation to the new head / re-send the lost wake
+        wake_b = (evict_b | redeliver_b) & (qlen > 0)
+        bank["wake_tmr"] = jnp.where(wake_b, self.wake_delay(ctx.p),
+                                     bank["wake_tmr"])
+        cs["msgs"] = cs["msgs"] + 2 * wake_b.sum()   # wake round trip
+        bank.update(qhead=qhead, qlen=qlen)
+        kind = jnp.where(evict_b, OUT_EVICT,
+                         jnp.where(redeliver_b & wake_b, OUT_REDELIVER,
+                                   OUT_NONE)).astype(jnp.int32)
+        return cs, bank, kind

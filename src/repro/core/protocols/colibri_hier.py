@@ -24,8 +24,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (MOD, NXT_MOD, NXT_WORK_DONE, OUT_DONE,
-                                       OUT_GRANT, OUT_NONE, OUT_SLEEP, RESP,
-                                       SLEEP, FusedOut, Protocol)
+                                       OUT_EVICT, OUT_GRANT, OUT_NONE,
+                                       OUT_REDELIVER, OUT_SLEEP, RESP, SLEEP,
+                                       FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -240,6 +241,57 @@ class ColibriHier(Protocol):
                     cur_grp=cur_grp, turn_srv=turn_srv,
                     wake_tmr=wake_tmr, wake_grp=wake_grp)
         return bank, FusedOut(kind=kind, tmr=tmr, msgs=msgs.astype(jnp.int32))
+
+    # ---- fault recovery (repro.faults) ----------------------------------
+    # Unlike the flat FIFO protocols the current holder is NOT queued
+    # (grantees skip the local queues; woken heads are popped), so
+    # eviction cannot pop the dead core — instead it REPLAYS the release
+    # handoff the dead owner would have performed: wake the serving
+    # group's next local waiter, else hand the address to the next
+    # registered group, else go idle.  The engine-tracked last grantee
+    # (``owner``) tells the watchdog whether the holder is dead.
+    def held(self, bank):
+        return bank["cur_grp"] >= 0
+
+    def on_timeout(self, ctx, cs, bank, stuck_b, killed, owner):
+        p, n, ba = ctx.p, ctx.n, ctx.ba
+        G, _, _ = self._geom(p, n)
+        lqlen = bank["lqlen"]
+        ggq, gqhead, gqlen = bank["ggq"], bank["gqhead"], bank["gqlen"]
+        g_inq, cur_grp = bank["g_inq"], bank["cur_grp"]
+        turn_srv = bank["turn_srv"]
+        wake_tmr, wake_grp = bank["wake_tmr"], bank["wake_grp"]
+        own_dead = (owner < n) & killed[jnp.clip(owner, 0, n - 1)]
+        evict_b = stuck_b & own_dead
+        g = jnp.clip(cur_grp, 0, G - 1)
+        more_local = evict_b & (lqlen[ba * G + g] > 0)
+        wake_grp = jnp.where(more_local, g, wake_grp)
+        wake_tmr = jnp.where(more_local, self.local_delay, wake_tmr)
+        end_b = evict_b & ~more_local
+        have_next = end_b & (gqlen > 0)
+        next_g = ggq[ba, gqhead]
+        cur_grp = jnp.where(have_next, next_g, cur_grp)
+        g_inq = g_inq.at[jnp.where(have_next, ba, ctx.a), next_g].set(
+            False, mode="drop")
+        gqhead = jnp.where(have_next, (gqhead + 1) % G, gqhead)
+        gqlen = gqlen - have_next
+        wake_grp = jnp.where(have_next, next_g, wake_grp)
+        wake_tmr = jnp.where(have_next, p.lat + 2, wake_tmr)
+        turn_srv = jnp.where(evict_b, 0, turn_srv)
+        cur_grp = jnp.where(end_b & ~have_next, -1, cur_grp)
+        # live owner, no progress: the recorded wake was lost — re-send
+        redeliver_b = (stuck_b & ~own_dead
+                       & (lqlen[ba * G + wake_grp] > 0))
+        wake_tmr = jnp.where(redeliver_b, self.local_delay, wake_tmr)
+        cs["msgs"] = cs["msgs"] + 2 * (more_local | have_next
+                                       | redeliver_b).sum()
+        bank.update(ggq=ggq, gqhead=gqhead, gqlen=gqlen, g_inq=g_inq,
+                    cur_grp=cur_grp, turn_srv=turn_srv,
+                    wake_tmr=wake_tmr, wake_grp=wake_grp)
+        kind = jnp.where(evict_b, OUT_EVICT,
+                         jnp.where(redeliver_b, OUT_REDELIVER,
+                                   OUT_NONE)).astype(jnp.int32)
+        return cs, bank, kind
 
     def on_wake(self, ctx, cs, bank):
         G, _, cap_l = self._geom(ctx.p, ctx.n)

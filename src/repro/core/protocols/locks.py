@@ -17,8 +17,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       OUT_DONE, OUT_FAIL, OUT_GRANT,
-                                       OUT_NONE, RESP, FusedOut, Protocol)
+                                       OUT_DONE, OUT_EVICT, OUT_FAIL,
+                                       OUT_GRANT, OUT_NONE, RESP, FusedOut,
+                                       Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -65,6 +66,20 @@ class SpinLock(Protocol):
         msgs = (2 * fx.acq_b.astype(jnp.int32)) if self.lr_pair else None
         bank = dict(bank, lock=(lock | got_b) & ~fx.rel_b)
         return bank, FusedOut(kind=kind, tmr=tmr, msgs=msgs)
+
+    # ---- fault recovery (repro.faults): timeout-and-retry ---------------
+    # a lock held with no release for watchdog_cyc whose holder is
+    # permanently dead is force-freed; the spinners' normal re-polls
+    # then take it (retry-based recovery, no wake path needed)
+    def held(self, bank):
+        return bank["lock"]
+
+    def on_timeout(self, ctx, cs, bank, stuck_b, killed, owner):
+        own_dead = (owner < ctx.n) & killed[jnp.clip(owner, 0, ctx.n - 1)]
+        free_b = stuck_b & own_dead
+        bank["lock"] = bank["lock"] & ~free_b
+        return cs, bank, jnp.where(free_b, OUT_EVICT,
+                                   OUT_NONE).astype(jnp.int32)
 
 
 @register
@@ -143,3 +158,16 @@ class TicketLock(Protocol):
         xset = {"tkt": (jnp.where(fx.rel_b, -1, my_tkt_b).astype(jnp.int32),
                         fx.acq_b | fx.rel_b)}
         return bank, FusedOut(kind=kind, tmr=tmr, xset=xset)
+
+    # ---- fault recovery (repro.faults): skip the dead ticket ------------
+    def held(self, bank):
+        return bank["serving"] < bank["next_tkt"]
+
+    def on_timeout(self, ctx, cs, bank, stuck_b, killed, owner):
+        own_dead = (owner < ctx.n) & killed[jnp.clip(owner, 0, ctx.n - 1)]
+        skip_b = stuck_b & own_dead
+        # advance the serving counter past the dead holder's ticket; the
+        # next waiter's re-poll matches and takes the lock
+        bank["serving"] = bank["serving"] + skip_b
+        return cs, bank, jnp.where(skip_b, OUT_EVICT,
+                                   OUT_NONE).astype(jnp.int32)

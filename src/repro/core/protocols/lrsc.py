@@ -9,8 +9,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
-                                       OUT_DONE, OUT_FAIL, OUT_GRANT,
-                                       OUT_NONE, RESP, FusedOut, Protocol)
+                                       OUT_DONE, OUT_EVICT, OUT_FAIL,
+                                       OUT_GRANT, OUT_NONE, RESP, FusedOut,
+                                       Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -67,3 +68,17 @@ class Lrsc(Protocol):
         tmr = jnp.full_like(kind, fx.p.lat)
         bank = dict(bank, resv_core=resv_core, resv_valid=resv_valid)
         return bank, FusedOut(kind=kind, tmr=tmr)
+
+    # ---- fault recovery (repro.faults): expire the stale slot -----------
+    # hardware reservations time out; a slot pinned with no successful
+    # SC for watchdog_cyc is expired unconditionally — safe by
+    # construction (a live owner just sees its SC fail and retries,
+    # which IS the lrsc recovery path), and it un-wedges the doomed-SC
+    # livelock a dead reservation holder otherwise causes forever
+    def held(self, bank):
+        return bank["resv_valid"]
+
+    def on_timeout(self, ctx, cs, bank, stuck_b, killed, owner):
+        bank["resv_valid"] = bank["resv_valid"] & ~stuck_b
+        return cs, bank, jnp.where(stuck_b, OUT_EVICT,
+                                   OUT_NONE).astype(jnp.int32)

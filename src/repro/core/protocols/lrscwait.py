@@ -13,12 +13,15 @@ import jax.numpy as jnp
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
                                        OUT_DONE, OUT_FAIL, OUT_GRANT,
                                        OUT_NONE, OUT_SLEEP, RESP, SLEEP,
-                                       FusedOut, Protocol)
+                                       FifoQueueRecovery, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
 @register
-class LrscWait(Protocol):
+class LrscWait(FifoQueueRecovery, Protocol):
+    # the FIFO watchdog recovery applies directly: the queue head IS the
+    # reservation owner (grantees enqueue too), so evicting a dead head
+    # hands the reservation to the next waiter (repro.faults)
     name = "lrscwait"
     uses_queue = True
     #: colibri: SuccessorUpdate on enqueue-behind + WakeUpRequest round trip

@@ -11,15 +11,23 @@ import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_MOD, NXT_WORK_DONE, OUT_DONE,
                                        OUT_GRANT, OUT_NONE, OUT_SLEEP, RESP,
-                                       SLEEP, FusedOut, Protocol)
+                                       SLEEP, FifoQueueRecovery, FusedOut,
+                                       Protocol)
 from repro.core.protocols.registry import register
 
 
 @register
-class MwaitLock(Protocol):
+class MwaitLock(FifoQueueRecovery, Protocol):
+    # same queue shape as lrscwait (head = lock holder), so the FIFO
+    # watchdog recovery applies: evict a dead holder, wake the successor
     name = "mwait_lock"
     uses_queue = True
     fixed_backoff = True
+
+    def wake_delay(self, p):
+        # successor wake: one response latency + Qnode bounce (the same
+        # cost the release-path wake pays)
+        return p.lat + 2
 
     def init_bank_state(self, p, a, n, q_cap):
         return dict(

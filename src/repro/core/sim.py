@@ -56,10 +56,12 @@ from repro.core import workloads as wl_registry
 from repro.core.metrics import LAT_BINS, LAT_SUB
 from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, NXT_BACKOFF,
                                        NXT_MOD, NXT_WORK_DONE, OUT_DONE,
-                                       OUT_FAIL, OUT_GRANT, OUT_SLEEP,
-                                       P_ACQ, P_REL, REQ, RESP, SLEEP, WORK)
+                                       OUT_EVICT, OUT_FAIL, OUT_GRANT,
+                                       OUT_NONE, OUT_SLEEP, P_ACQ, P_REL,
+                                       REQ, RESP, SLEEP, WORK)
 from repro.core.workloads.base import (ADDR_FIXED, ADDR_ZIPF, K_BARRIER,
                                        zipf_index)
+from repro.faults import DROP_DENOM, FaultPlan
 from repro.kernels import engine_step
 from repro.obs.schema import TELE_K, TELE_NSUM, window_len
 
@@ -177,6 +179,15 @@ class SimParams:
     # written carry is a measured compile cliff — EXPERIMENTS.md
     # §Metric-cost / §Telemetry-cost).
     telemetry_windows: int = 0
+    # Fault injection & recovery (repro.faults): a FaultPlan describing
+    # deterministic seed-derived core kills/stalls, NoC message drops
+    # (incl. lost wakeups) and bank stalls, plus the recovery knobs
+    # (reservation watchdog_cyc -> protocol on_timeout eviction, and the
+    # progress_cyc livelock/deadlock flag).  The default no-fault plan
+    # statically elides every fault branch AND every extra scan carry —
+    # the off path is bit-identical to the pre-fault engine
+    # (tests/test_faults.py pins both, jaxpr carry count included).
+    faults: FaultPlan = FaultPlan()
 
     # Early validation: bad names and impossible sizes fail HERE, with
     # the registry's available names in the message, instead of deep
@@ -221,6 +232,17 @@ class SimParams:
                 f"backend {self.backend!r} requires a {dev} device and "
                 f"none is visible to jax; available backends: "
                 f"{', '.join(available_backends())}")
+        # forgiving about shape, strict about content: None and plain
+        # dicts (the JSON round-trip shape) normalize to a FaultPlan,
+        # whose own __post_init__ owns the field validation
+        if self.faults is None:
+            object.__setattr__(self, "faults", FaultPlan())
+        elif isinstance(self.faults, dict):
+            object.__setattr__(self, "faults", FaultPlan(**self.faults))
+        elif not isinstance(self.faults, FaultPlan):
+            raise ValueError(
+                f"faults must be a FaultPlan, a dict or None "
+                f"(got {self.faults!r})")
         wl = wl_registry.get(self.workload)
         if self.n_addrs < wl.min_addrs:
             raise ValueError(
@@ -367,6 +389,42 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     if use_tele:
         state["tele"] = jnp.zeros((p.telemetry_windows, TELE_K), jnp.int32)
         tele_cw = window_len(p.cycles, p.telemetry_windows)
+    # ---- fault injection & recovery (repro.faults) ----------------------
+    # Same carry-cliff discipline as telemetry: EVERY fault carry and
+    # branch below is Python-gated on the plan, so the default no-fault
+    # plan traces to exactly the pre-fault scan (bit-identical, zero
+    # extra carries — tests/test_faults.py asserts the jaxpr).  Victim
+    # sets are drawn host-side from the plan's seed (trace constants,
+    # never carried); only the holder-kill mode needs in-scan state
+    # because its victims are data-dependent (the first n_kill grantees).
+    fp = p.faults
+    use_faults = fp.enabled
+    holder_mode = use_faults and fp.n_kill > 0 and fp.kill_holder == 1
+    uni_kill = use_faults and fp.n_kill > 0 and fp.kill_holder == 0
+    has_stall = use_faults and fp.n_stall > 0
+    has_bstall = use_faults and fp.n_bank_stall > 0
+    has_drop = use_faults and fp.msg_drop_bp > 0
+    any_core_fault = holder_mode or uni_kill or has_stall
+    use_wd = (use_faults and fp.watchdog_cyc > 0
+              and proto.held(state["bank"]) is not None)
+    if use_faults:
+        kill_m = jnp.asarray(fp.kill_mask(n)) if uni_kill else None
+        stall_m = jnp.asarray(fp.stall_mask(n)) if has_stall else None
+        bstall_m = jnp.asarray(fp.bank_stall_mask(a)) if has_bstall else None
+        n_kill_eff = min(fp.n_kill, n)
+        n_stall_eff = min(fp.n_stall, n)
+        n_bstall_eff = min(fp.n_bank_stall, a)
+        prog_thr = fp.progress_threshold()
+        state["faults_injected"] = jnp.zeros((), jnp.int32)
+        state["halt_cyc"] = jnp.full((), -1, jnp.int32)   # -1: never halted
+        state["last_ret"] = jnp.zeros((), jnp.int32)
+        if holder_mode:
+            state["kmask"] = jnp.zeros((n,), bool)        # killed holders
+            state["kleft"] = jnp.full((), fp.n_kill, jnp.int32)
+        if use_wd:
+            state["wd_srv"] = jnp.zeros((a,), jnp.int32)  # last service cyc
+            state["wd_own"] = jnp.full((a,), n, jnp.int32)  # last grantee
+            state["recoveries"] = jnp.zeros((), jnp.int32)
     xc_keys = tuple(state["xc"])
 
     # ---- closure constants hoisted out of the scan body ----------------
@@ -428,6 +486,35 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         # ---- timers ----
         tmr = jnp.maximum(tmr - 1, 0)
         t0 = tmr == 0
+
+        # ---- fault injection: dead/stalled cores freeze ----
+        # dead = permanently killed ∪ inside a transient stall window.
+        # A dead core freezes (timers never fire, no new requests, no
+        # retransmits) but requests already in flight still get served —
+        # if one was granted a reservation, the bank wedges: exactly the
+        # failure the reservation watchdog exists for.
+        if any_core_fault:
+            if holder_mode:
+                killed = s["kmask"]
+            elif uni_kill:
+                killed = kill_m & (cyc >= fp.kill_cyc)
+            else:
+                killed = jnp.zeros((n,), bool)
+            dead = killed
+            if has_stall:
+                dead = dead | (stall_m & (cyc >= fp.stall_cyc)
+                               & (cyc < fp.stall_cyc + fp.stall_dur))
+            t0 = t0 & ~dead
+        if use_faults:
+            finj = s["faults_injected"]
+            if uni_kill:
+                finj = finj + jnp.where(cyc == fp.kill_cyc, n_kill_eff, 0)
+            if has_stall:
+                finj = finj + jnp.where(cyc == fp.stall_cyc,
+                                        n_stall_eff, 0)
+            if has_bstall:
+                finj = finj + jnp.where(cyc == fp.bank_stall_cyc,
+                                        n_bstall_eff, 0)
 
         # ---- timer-expiry dispatch (one predicated block) ----
         # WORK -> issue current micro-op's acquire; BACKOFF -> reissue
@@ -505,6 +592,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         if has_workers:
             w_tmr = jnp.maximum(s["w_tmr"] - 1, 0)
             w_arr = is_worker & (w_tmr == 0)     # a load arrives at a bank
+            if any_core_fault:
+                w_arr = w_arr & ~dead            # dead workers go silent
         else:
             w_tmr = s["w_tmr"]
             w_arr = jnp.zeros((n,), bool)
@@ -513,6 +602,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         # A new request consumes one network slot ONCE; accepted requests are
         # "parked" in the bank input queue and no longer use the network.
         fresh = (st == REQ) & (tmr == 0) & ~is_worker & ~s["parked"]
+        if any_core_fault:
+            fresh = fresh & ~dead                # dead cores stop sending
         shift = (cyc * 97) % n
         rot = (iota + shift) % n
         all_req = fresh | w_arr
@@ -527,6 +618,16 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                             0)
         budget = jnp.maximum(rp.net_bw - s["resp_prev"] - hol, 1)
         accepted = accept_rotating_fair(all_req, rot, budget, shift=shift)
+        # Bernoulli NoC drop on newly-accepted requests: the message
+        # dies in flight, the core stays in REQ and retransmits next
+        # cycle; the wasted link hop is billed into msgs below
+        if has_drop:
+            u = _hash(iota * 9781 + cyc * 6271 + fp.fault_seed * 977 + 13)
+            req_drop = (fresh & accepted
+                        & ((u % DROP_DENOM) < fp.msg_drop_bp))
+            accepted = accepted & ~req_drop
+            n_req_drop = req_drop.sum()
+            finj = finj + n_req_drop
         w_acc = w_arr & accepted
         if has_workers:
             w_served = s["w_served"] + w_acc
@@ -541,6 +642,14 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
 
         # ---- bank arbitration: FIFO by arrival stamp among parked ----
         arrived = parked & (st == REQ)
+        # bank-stall window: stalled banks accept no requests (parked
+        # requesters keep waiting); masking the arbitration INPUT makes
+        # the scan and pallas paths identical by construction (the
+        # kernel sees the masked cand_cyc)
+        if has_bstall:
+            bs_now = ((cyc >= fp.bank_stall_cyc)
+                      & (cyc < fp.bank_stall_cyc + fp.bank_stall_dur))
+            arrived = arrived & ~(bstall_m[addr] & bs_now)
         if use_pallas:
             # fused engine-step kernel (repro.kernels.engine_step):
             # arbitration + protocol bank update + latency histogram in
@@ -661,12 +770,91 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                     retires=(resp_b & (nxt_b == NXT_WORK_DONE)).sum(),
                     fails=(resp_b & (nxt_b == NXT_BACKOFF)).sum(),
                     enqueues=(valid_b & (st_b == SLEEP)).sum())
+        if use_tele or use_wd or holder_mode:
             st_pre_wake = cs["st"]
 
         # ---- wakeups (queue-based protocols) ----
+        # lost wakeup: a wake message firing this cycle drops with
+        # msg_drop_bp probability — the sleeping head never hears it.
+        # Without a watchdog the bank wedges forever; this is the
+        # classic lost-wakeup hazard recovery must cover.
         wake_load = jnp.zeros((), jnp.int32)
+        if proto.uses_queue and has_drop:
+            wt = bank["wake_tmr"]
+            uw = _hash(ba * 3643 + cyc * 9176 + fp.fault_seed * 389 + 7)
+            wdrop = (wt == 1) & ((uw % DROP_DENOM) < fp.msg_drop_bp)
+            bank["wake_tmr"] = jnp.where(wdrop, 0, wt)
+            finj = finj + wdrop.sum()
         if proto.uses_queue:
             cs, bank, wake_load = proto.on_wake(ctx, cs, bank)
+
+        # ---- fault recovery: holder kills + reservation watchdog ----
+        if holder_mode or use_wd:
+            # per-bank grant/retire flags.  Pallas: straight from the
+            # kernel's outcome codes; scan: recovered from the (st, nxt)
+            # the protocol wrote at each winner.  Reading AFTER on_wake
+            # is still exact — a winner was REQ this cycle, never
+            # sleeping, so on_wake cannot have touched it.
+            if use_pallas:
+                grant_bk = fs["kind"] == OUT_GRANT
+                retire_bk = fs["kind"] == OUT_DONE
+            else:
+                stb, nxb = cs["st"][wcs], cs["nxt"][wcs]
+                grant_bk = valid_b & (stb == RESP) & (nxb == NXT_MOD)
+                retire_bk = valid_b & (stb == RESP) & (nxb
+                                                       == NXT_WORK_DONE)
+            # queue protocols hand ownership over by WAKE after warmup
+            # (a bank-side OUT_GRANT needs an empty queue) — a woken
+            # core is the new owner just as much as a granted one
+            woken = (((st_pre_wake == SLEEP) & (cs["st"] != SLEEP))
+                     if proto.uses_queue else jnp.zeros((n,), bool))
+        if holder_mode:
+            # targeted holder kill: the first n_kill cores handed
+            # ownership (bank grant or wake) at or after kill_cyc die
+            # while holding — the adversarial case (reservation/lock
+            # owner vanishes mid-critical-section)
+            gcore = jnp.zeros((n,), bool).at[
+                jnp.where(grant_bk, win_core, n)].set(True, mode="drop")
+            cand = (gcore | woken) & (cyc >= fp.kill_cyc) & ~s["kmask"]
+            rank = jnp.cumsum(cand.astype(jnp.int32)) - 1
+            newk = cand & (rank < s["kleft"])
+            kmask = s["kmask"] | newk
+            kleft = s["kleft"] - newk.sum()
+            finj = finj + newk.sum()
+            killed = kmask                       # includes this cycle's
+        if use_wd:
+            # reservation watchdog: per-bank service timer, re-armed on
+            # every sign of life (not held / a retire / a wake handoff).
+            # Grants do NOT re-arm it — under lrsc a dead holder lets
+            # doomed LRs keep "granting" forever, which is exactly the
+            # livelock the watchdog must see through.
+            held_b = proto.held(bank)
+            wd_own = jnp.where(grant_bk, win_core, s["wd_own"])
+            wd_own = wd_own.at[jnp.where(woken, addr, a)].set(
+                iota, mode="drop")
+            wd_srv = jnp.where(~held_b | retire_bk, cyc, s["wd_srv"])
+            wd_srv = wd_srv.at[jnp.where(woken, addr, a)].set(
+                cyc, mode="drop")
+            stuck_b = held_b & (cyc - wd_srv >= fp.watchdog_cyc)
+            killed_perm = (killed if (holder_mode or uni_kill)
+                           else jnp.zeros((n,), bool))
+            cs, bank, rkind = proto.on_timeout(ctx, cs, bank, stuck_b,
+                                               killed_perm, wd_own)
+            recoveries = s["recoveries"] + (rkind != OUT_NONE).sum()
+            wd_srv = jnp.where(stuck_b, cyc, wd_srv)     # re-arm
+            # an eviction vacates the bank: forget the owner, else a
+            # second timeout blames the dead core again and (e.g. for
+            # ticket_lock) skips a LIVE waiter's turn — the next grant
+            # or wake re-learns it
+            wd_own = jnp.where(rkind == OUT_EVICT, n, wd_own)
+        if use_faults:
+            # forward-progress watchdog: no retirement anywhere for
+            # prog_thr cycles => flag the halt cycle (detected livelock/
+            # deadlock — the run completes and reports, never hangs)
+            last_ret = jnp.where(done.any(), cyc, s["last_ret"])
+            halt_cyc = jnp.where(
+                (s["halt_cyc"] < 0) & (cyc - last_ret >= prog_thr),
+                cyc, s["halt_cyc"])
 
         # network slots consumed by this cycle's responses and protocol
         # side-messages (SuccessorUpdate / WakeUpRequest / Mwait setup)
@@ -709,6 +897,10 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                                   jnp.max(jnp.where(fut, lat_b, 0)))
         extra = cs["msgs"] - s["msgs"] - 2 * winner.sum()
         resp_load = winner.sum() + w_acc.sum() + extra + wake_load
+        if has_drop:
+            # the dropped request traversed the NoC once before dying;
+            # billed after ``extra`` so it never occupies a response slot
+            cs["msgs"] = cs["msgs"] + n_req_drop
         # per-cycle state census, shared by the cumulative stats and the
         # telemetry row (hoisted so telemetry adds no second n-lane pass)
         sleep_now = (st == SLEEP).sum()
@@ -741,6 +933,15 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                    backoff_cyc=backoff_cyc,
                    bank_ops=bank_ops, net_stall=net_stall,
                    w_tmr=w_tmr, w_served=w_served)
+        if use_faults:
+            out["faults_injected"] = finj
+            out["last_ret"] = last_ret
+            out["halt_cyc"] = halt_cyc
+            if holder_mode:
+                out["kmask"], out["kleft"] = kmask, kleft
+            if use_wd:
+                out["wd_srv"], out["wd_own"] = wd_srv, wd_own
+                out["recoveries"] = recoveries
         # ---- telemetry accumulation: one window row per cycle ----
         # cyc // tele_cw is overflow-free (tele_cw is a static ceil
         # division; no cyc * n_windows product).  Column order follows
@@ -775,6 +976,19 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     flat = {k: v for k, v in final.items() if k not in ("bank", "xc")}
     flat.update(final["bank"])
     flat.update(final["xc"])
+    if use_faults:
+        # dead-at-horizon core mask for the survivor metrics (holder
+        # kills come from the carry; scheduled kills/stalls are trace
+        # constants — vmap broadcasts them across the batch dim)
+        dm = final["kmask"] if holder_mode else jnp.zeros((n,), bool)
+        if uni_kill and fp.kill_cyc < p.cycles:
+            dm = dm | kill_m
+        if has_stall and (fp.stall_cyc <= p.cycles - 1
+                          < fp.stall_cyc + fp.stall_dur):
+            dm = dm | stall_m
+        flat["dead_mask"] = dm
+        if not use_wd:
+            flat["recoveries"] = jnp.zeros((), jnp.int32)
     if p.record_trace:
         flat["trace_step"] = trace["step"]
         flat["trace_wait"] = trace["wait"]

@@ -55,6 +55,7 @@ regenerate them.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import time
 import warnings
@@ -73,7 +74,7 @@ from repro.core.sim import (DYN_FIELDS, _DENSE_BANK_ELTS, SimParams,
 #: factor are baked into the scan body, so all are part of the fingerprint
 STATIC_FIELDS = ("protocol", "workload", "n_cores", "cycles", "q_slots",
                  "n_groups", "record_trace", "unroll", "backend",
-                 "telemetry_windows")
+                 "telemetry_windows", "faults")
 
 #: default ceiling on points per compiled vmap invocation
 #: (``REPRO_SWEEP_MAX_BATCH`` overrides — read at each ``sweep()`` call,
@@ -122,6 +123,19 @@ def _static_key(p: SimParams):
     return tuple(getattr(p, f) for f in STATIC_FIELDS) + (_bucket_a(p.n_addrs),)
 
 
+#: headline metrics screened for NaN/inf per point — ``fairness_span``
+#: is deliberately absent (inf legitimately encodes a starved core)
+_HEADLINE_KEYS = ("throughput", "jain_fairness", "energy_pj_per_op")
+
+
+def _finite_metrics(res) -> bool:
+    for k in _HEADLINE_KEYS:
+        v = res.get(k)
+        if v is not None and not math.isfinite(float(v)):
+            return False
+    return True
+
+
 @partial(jax.jit, static_argnums=(0, 2))
 def _sweep_group(rep: SimParams, dyn: Dict[str, jnp.ndarray], batch: int):
     # `batch` sizes the engine's dense-vs-scatter arbitration choice for
@@ -161,6 +175,18 @@ def sweep_iter(configs: Sequence[SimParams],
     used (no-op when neither exists).  Instrumentation never changes
     results — it only reads clocks around the existing dispatch and
     transfer points.
+
+    **Failure isolation:** a chunk that raises (at dispatch, execution
+    or metric derivation) no longer kills the whole stream.  The
+    poisoned chunk is re-run through a bisection ladder — halves
+    batched, a failing half split again, a failing single point re-run
+    solo — so every healthy point still yields its normal result and
+    only the minimal failing set yields a structured error record
+    (``{"error": "ExcType: message", "error_stage": ...}``, surfaced as
+    ``Result.ok == False``).  Points whose headline metrics come back
+    non-finite (NaN/inf throughput, Jain or energy — never the
+    legitimately-inf ``fairness_span``) get one solo retry, then an
+    error record.  Healthy sweeps take the exact pre-isolation path.
     """
     if max_batch is None:
         max_batch = int(os.environ.get("REPRO_SWEEP_MAX_BATCH",
@@ -179,18 +205,80 @@ def sweep_iter(configs: Sequence[SimParams],
         from repro.core.sim import resolve_backend
         report.note_env(resolve_backend(configs[0].backend), max_batch)
 
+    def solo(i, stage):
+        """Last rung of the isolation ladder: run ONE point un-batched;
+        a failure here becomes its structured error record."""
+        c = configs[i]
+        try:
+            rep1 = dataclasses.replace(c, n_addrs=_bucket_a(c.n_addrs))
+            dyn1 = {f: jnp.asarray([getattr(c, f)], jnp.int32)
+                    for f in DYN_FIELDS}
+            out1 = jax.device_get(_sweep_group(rep1, dyn1, 1))
+            stage = "metrics"
+            m = derive_metrics({k: v[0] for k, v in out1.items()},
+                               min(c.n_workers, c.n_cores), c.cycles,
+                               energy_fit=energy_fit)
+        except Exception as e:       # noqa: BLE001 — fenced by design
+            return {"error": f"{type(e).__name__}: {e}",
+                    "error_stage": stage}
+        if not _finite_metrics(m):
+            return {"error": "non-finite headline metrics "
+                             "(throughput/jain/energy)",
+                    "error_stage": "nonfinite"}
+        return m
+
+    def derive_checked(i, res, stage):
+        """Per-point metric derivation with the solo-retry fallback."""
+        c = configs[i]
+        try:
+            m = derive_metrics(res, min(c.n_workers, c.n_cores), c.cycles,
+                               energy_fit=energy_fit)
+        except Exception:            # noqa: BLE001 — fenced by design
+            return solo(i, "metrics")
+        if not _finite_metrics(m):
+            return solo(i, "nonfinite")
+        return m
+
+    def isolate(part, stage):
+        """Bisected retry of a poisoned chunk: halves re-run batched,
+        a failing half recurses, a single point falls through to
+        :func:`solo` — healthy points keep their normal results."""
+        if len(part) == 1:
+            yield part[0], solo(part[0], stage)
+            return
+        mid = len(part) // 2
+        for half in (part[:mid], part[mid:]):
+            chunk = [configs[i] for i in half]
+            try:
+                rep_h = dataclasses.replace(
+                    chunk[0], n_addrs=_bucket_a(chunk[0].n_addrs))
+                dyn_h = {f: jnp.asarray([getattr(c, f) for c in chunk],
+                                        jnp.int32) for f in DYN_FIELDS}
+                out_h = jax.device_get(_sweep_group(rep_h, dyn_h,
+                                                    len(chunk)))
+            except Exception:        # noqa: BLE001 — fenced by design
+                yield from isolate(half, stage)
+                continue
+            for j, i in enumerate(half):
+                yield i, derive_checked(i, {k: v[j] for k, v in
+                                            out_h.items()}, stage)
+
     def materialize(part, out, rec):
         # one device->host transfer per chunk (the whole result pytree)
         t0 = time.perf_counter()
-        out_np = jax.device_get(out)
+        try:
+            out_np = jax.device_get(out)
+        except Exception:            # noqa: BLE001 — fenced by design
+            if rec is not None:
+                rec.execute_s = time.perf_counter() - t0
+            yield from isolate(part, "execute")
+            return
         if rec is not None:
             # async dispatch drains here, so this wall is execute time
             rec.execute_s = time.perf_counter() - t0
         for j, i in enumerate(part):             # padding rows never read
             res = {k: v[j] for k, v in out_np.items()}
-            yield i, derive_metrics(
-                res, min(configs[i].n_workers, configs[i].n_cores),
-                configs[i].cycles, energy_fit=energy_fit)
+            yield i, derive_checked(i, res, "metrics")
 
     # dispatch chunks ahead of materialization: jax computations are
     # async, so the next chunk's host-side setup (and, with >1 device,
@@ -240,7 +328,13 @@ def sweep_iter(configs: Sequence[SimParams],
             t0 = time.perf_counter()
             cache_before = _sweep_group._cache_size() \
                 if report is not None else 0
-            out = _sweep_group(crep, dyn, len(padded))
+            try:
+                out = _sweep_group(crep, dyn, len(padded))
+            except Exception:        # noqa: BLE001 — fenced by design
+                # poisoned at trace/compile time: fence it now, the
+                # stream keeps flowing
+                yield from isolate(part, "dispatch")
+                continue
             rec = None
             if report is not None:
                 # the jitted call traces+compiles synchronously on an

@@ -1,0 +1,16 @@
+"""Fault injection & recovery (``repro.faults``).
+
+:class:`FaultPlan` is the declarative fault schedule
+``Spec(faults=...)`` accepts: deterministic seed-derived core
+kills/stalls, Bernoulli NoC message drops (including lost wakeups) and
+bank-stall windows, paired with the recovery knobs (the per-bank
+reservation ``watchdog_cyc`` driving each protocol's ``on_timeout``
+eviction hook, and the ``progress_cyc`` livelock/deadlock flag).
+
+The engine statically elides everything for the default no-fault plan
+(``tests/test_faults.py`` pins bit-identity AND an unchanged scan carry
+count), so fault support is free when off.
+"""
+from repro.faults.plan import DROP_DENOM, FaultPlan
+
+__all__ = ["DROP_DENOM", "FaultPlan"]

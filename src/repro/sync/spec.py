@@ -1,7 +1,7 @@
 """``Spec`` — the frozen, validated, declarative simulation spec.
 
 A :class:`Spec` is the public description of ONE simulation point,
-organised into four sub-groups instead of the engine's flat 20-field
+organised into five sub-groups instead of the engine's flat
 ``SimParams``:
 
 =============  ==========================================================
@@ -14,6 +14,10 @@ organised into four sub-groups instead of the engine's flat 20-field
 ``costs``      cycle costs and execution: network latency, local work,
                modify time, horizon, seed, scan unroll, backend, trace
                flag
+``faults``     fault injection & recovery (:class:`repro.faults.
+               FaultPlan`): core kills/stalls, message drops, bank
+               stalls, the reservation watchdog and the forward-
+               progress detector; all-zero = off and statically elided
 =============  ==========================================================
 
 Construction is deliberately forgiving about *shape* and strict about
@@ -47,6 +51,7 @@ import json
 from typing import Any, Dict, Mapping, Optional
 
 from repro.core.sim import SimParams
+from repro.faults import FaultPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,9 +103,12 @@ class Costs:
     #                           bit-identical to the untelemetered engine
 
 
-#: (spec attribute, group class) in declaration order
+#: (spec attribute, group class) in declaration order.  ``faults`` is
+#: special in ONE way: it lowers onto a single ``SimParams.faults``
+#: field instead of being flattened (see ``_lower``).
 _GROUPS = (("protocol", Protocol), ("workload", Workload),
-           ("topology", Topology), ("costs", Costs))
+           ("topology", Topology), ("costs", Costs),
+           ("faults", FaultPlan))
 
 #: flat field name -> owning group attribute ("protocol"/"workload"
 #: route to the group's ``name``; every other field name is unique)
@@ -144,20 +152,21 @@ class Spec:
     workload: Workload
     topology: Topology
     costs: Costs
+    faults: FaultPlan
 
     def __init__(self, protocol=None, workload=None, topology=None,
-                 costs=None, **flat: Any):
+                 costs=None, faults=None, **flat: Any):
         routed: Dict[str, Dict[str, Any]] = {g: {} for g, _ in _GROUPS}
         for k, v in flat.items():
             g = _FLAT_TO_GROUP.get(k)
             if g is None:
                 raise ValueError(
                     f"unknown Spec field {k!r}; known fields: "
-                    f"{', '.join(sorted(_FLAT_TO_GROUP))} "
-                    f"(plus the groups protocol/workload/topology/costs)")
+                    f"{', '.join(sorted(_FLAT_TO_GROUP))} (plus the "
+                    f"groups protocol/workload/topology/costs/faults)")
             routed[g][k] = v
         given = {"protocol": protocol, "workload": workload,
-                 "topology": topology, "costs": costs}
+                 "topology": topology, "costs": costs, "faults": faults}
         for gname, gcls in _GROUPS:
             object.__setattr__(self, gname, _build_group(
                 gname, gcls, given[gname], routed[gname]))
@@ -169,8 +178,11 @@ class Spec:
     # ---- lowering -------------------------------------------------------
     def _lower(self) -> SimParams:
         kw: Dict[str, Any] = {"protocol": self.protocol.name,
-                              "workload": self.workload.name}
+                              "workload": self.workload.name,
+                              "faults": self.faults}
         for gname, gcls in _GROUPS:
+            if gname == "faults":          # one engine field, not flattened
+                continue
             g = getattr(self, gname)
             for f in dataclasses.fields(gcls):
                 if f.name != "name":

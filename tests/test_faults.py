@@ -1,0 +1,301 @@
+"""Fault-injection & recovery subsystem (``repro.faults``): static
+elision, deterministic schedules, backend equivalence, the liveness
+invariants of every protocol's recovery path, and the sweep runner's
+poisoned-chunk isolation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.sweep as sweep_mod
+from repro.core.protocols.registry import names as proto_names
+from repro.core.sim import SimParams, simulate
+from repro.faults import FaultPlan
+from repro.sync import Result, Spec, Study, run
+
+KILL = FaultPlan(n_kill=2, kill_cyc=300, kill_holder=1, watchdog_cyc=64,
+                 progress_cyc=400)
+NOWD = dataclasses.replace(KILL, watchdog_cyc=0)
+
+
+def _params(proto="lrscwait", **kw):
+    kw.setdefault("n_cores", 32)
+    kw.setdefault("n_addrs", 4)
+    kw.setdefault("cycles", 1200)
+    return SimParams(protocol=proto, **kw)
+
+
+# ------------------------------------------------------------ FaultPlan
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(n_kill=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(kill_holder=2)
+    with pytest.raises(ValueError):
+        FaultPlan(msg_drop_bp=10_001)
+    with pytest.raises(ValueError):
+        FaultPlan(n_stall=2)                  # stall needs a duration
+    with pytest.raises(ValueError):
+        FaultPlan(n_bank_stall=1)
+    assert not FaultPlan().enabled
+    assert FaultPlan(watchdog_cyc=8).enabled
+    assert not FaultPlan(watchdog_cyc=8).injects
+    assert FaultPlan(msg_drop_bp=1).injects
+
+
+def test_schedule_determinism():
+    """Victim selection is a pure function of (fault_seed, salt) — the
+    same plan always draws the same victims, different seeds draw
+    different ones, and the kill/stall/bank draws are decorrelated."""
+    a = FaultPlan(n_kill=3, kill_cyc=1, fault_seed=5)
+    b = FaultPlan(n_kill=3, kill_cyc=1, fault_seed=5)
+    c = FaultPlan(n_kill=3, kill_cyc=1, fault_seed=6)
+    assert np.array_equal(a.kill_mask(64), b.kill_mask(64))
+    assert not np.array_equal(a.kill_mask(64), c.kill_mask(64))
+    assert a.kill_mask(64).sum() == 3
+    d = FaultPlan(n_kill=3, kill_cyc=1, n_stall=3, stall_cyc=1,
+                  stall_dur=1, fault_seed=5)
+    assert not np.array_equal(d.kill_mask(64), d.stall_mask(64))
+    assert FaultPlan(n_kill=99, kill_cyc=1).kill_mask(8).sum() == 8
+
+
+# ------------------------------------------------- static elision
+
+def _num_carry(p):
+    jpr = jax.make_jaxpr(lambda: simulate(p))()
+    scans = [e for e in jpr.jaxpr.eqns if e.primitive.name == "scan"]
+    assert len(scans) == 1
+    return scans[0].params["num_carry"]
+
+
+def test_faults_off_statically_elided():
+    """faults=FaultPlan() adds ZERO scan carries and is bit-identical
+    to the pre-faults engine — the telemetry/PR 4 carry-cliff lesson
+    applied to this subsystem."""
+    off = _params()
+    explicit = _params(faults=FaultPlan())
+    assert _num_carry(off) == _num_carry(explicit)
+    assert _num_carry(_params(faults=KILL)) > _num_carry(off)
+    r0, r1 = simulate(off), simulate(explicit)
+    assert set(r0) == set(r1)
+    for k in r0:
+        assert jnp.array_equal(r0[k], r1[k]), k
+    assert "faults_injected" not in r0 and "dead_mask" not in r0
+
+
+def test_faults_normalization():
+    """dict / None faults normalize; junk is rejected eagerly."""
+    p = _params(faults={"n_kill": 1, "kill_cyc": 5, "watchdog_cyc": 8})
+    assert p.faults == FaultPlan(n_kill=1, kill_cyc=5, watchdog_cyc=8)
+    assert _params(faults=None).faults == FaultPlan()
+    with pytest.raises((TypeError, ValueError)):
+        _params(faults=7)
+
+
+# ------------------------------------------------- backend equivalence
+
+def test_backend_bit_identity_with_faults():
+    """All fault logic lives outside the fused kernel, so the scan
+    oracle and the Pallas interpreter stay bit-identical under the full
+    fault mix."""
+    fp = FaultPlan(n_kill=2, kill_cyc=200, kill_holder=1, watchdog_cyc=64,
+                   msg_drop_bp=150, n_bank_stall=1, bank_stall_cyc=400,
+                   bank_stall_dur=100)
+    for proto in ("lrscwait", "mwait_lock", "lrsc"):
+        r_cpu = simulate(_params(proto, backend="xla_cpu", faults=fp))
+        r_int = simulate(_params(proto, backend="pallas_interpret",
+                                 faults=fp))
+        assert set(r_cpu) == set(r_int)
+        for k in r_cpu:
+            assert jnp.array_equal(jnp.asarray(r_cpu[k]),
+                                   jnp.asarray(r_int[k])), (proto, k)
+
+
+# ------------------------------------------------- liveness invariants
+
+def test_owner_kill_recovery_all_protocols():
+    """The headline invariant: with the reservation watchdog every
+    protocol sustains forward progress through an adversarial owner
+    kill; without it every holder-based protocol is DETECTED as
+    deadlocked (halt flagged, run completes) — and amo, which holds
+    nothing, is untouchable by holder kills."""
+    for proto in proto_names():
+        r = simulate(_params(proto, cycles=3000, faults=KILL))
+        halt = int(r["halt_cyc"])
+        if proto == "amo":
+            assert int(r["faults_injected"]) == 0      # no holders exist
+            assert halt < 0
+            continue
+        assert int(r["faults_injected"]) == 2, proto
+        assert int(r["recoveries"]) >= 1, proto
+        assert halt < 0, (proto, halt)                 # stayed live
+        assert int(r["dead_mask"].sum()) == 2, proto
+        # watchdog off: the same kill wedges the system and the
+        # forward-progress detector flags it (never a hang)
+        r2 = simulate(_params(proto, cycles=4000, faults=NOWD))
+        assert int(r2["halt_cyc"]) >= 0, proto
+        assert int(r2["recoveries"]) == 0
+
+
+def test_lost_wakeups_recovered():
+    """Dropped wake messages wedge a sleep-based bank until the
+    watchdog redelivers: throughput degrades but never halts."""
+    fp = FaultPlan(msg_drop_bp=300, watchdog_cyc=64, progress_cyc=400)
+    for proto in ("lrscwait", "colibri", "mwait_lock"):
+        r = simulate(_params(proto, cycles=3000, faults=fp))
+        assert int(r["halt_cyc"]) < 0, proto
+        assert int(r["faults_injected"]) > 0, proto
+        assert int(r["ops"].sum()) > 0
+
+
+def test_transient_stall_and_bank_stall_recover():
+    base = _params(cycles=3000)
+    r_stall = simulate(dataclasses.replace(base, faults=FaultPlan(
+        n_stall=4, stall_cyc=500, stall_dur=300, watchdog_cyc=64,
+        progress_cyc=400)))
+    # the stall window closed before the horizon: nobody is dead at the
+    # end and progress resumed
+    assert int(r_stall["dead_mask"].sum()) == 0
+    assert int(r_stall["halt_cyc"]) < 0
+    r_bank = simulate(dataclasses.replace(base, faults=FaultPlan(
+        n_bank_stall=1, bank_stall_cyc=500, bank_stall_dur=200,
+        watchdog_cyc=64, progress_cyc=400)))
+    assert int(r_bank["halt_cyc"]) < 0
+    assert int(r_bank["faults_injected"]) >= 1
+
+
+# ------------------------------------------------- spec / result / metrics
+
+def test_spec_faults_round_trip():
+    s = Spec(protocol="lrscwait", n_cores=32, n_addrs=4,
+             costs={"cycles": 800}, n_kill=2, kill_cyc=300,
+             watchdog_cyc=64)
+    assert s.faults.n_kill == 2 and s.faults.watchdog_cyc == 64
+    assert Spec.from_json(s.to_json()) == s
+    assert Spec.from_dict(s.to_dict()) == s
+    assert Spec.from_params(s.to_params()) == s
+    s2 = s.replace(faults={"msg_drop_bp": 100})
+    assert s2.faults.n_kill == 2 and s2.faults.msg_drop_bp == 100
+    assert s.replace(watchdog_cyc=0).faults.watchdog_cyc == 0
+    with pytest.raises(ValueError):
+        Spec(protocol="lrscwait", faults={"bogus_knob": 1})
+
+
+def test_result_fault_metrics():
+    s = Spec(protocol="lrscwait", n_cores=32, n_addrs=4,
+             costs={"cycles": 2000},
+             faults=FaultPlan(n_kill=2, kill_cyc=300, watchdog_cyc=64,
+                              progress_cyc=400))
+    r = run(s)
+    assert r.ok and r.error is None
+    assert r.progress_ok is True
+    assert r.recoveries >= 1 and r.faults_injected == 2
+    assert r.stats["stalled_cores"] == 2
+    # survivors-only throughput excludes the dead cores' zeros
+    assert 0 < r.stats["survivor_throughput"] <= r.throughput + 1e-12
+    assert 0 < r.stats["survivor_jain"] <= 1.0
+    row = r.to_row()
+    for k in ("progress_ok", "recoveries", "faults_injected",
+              "stalled_cores", "survivor_throughput", "survivor_jain"):
+        assert k in row
+    r2 = Result.from_json(r.to_json())
+    assert r2.progress_ok is True and r2.recoveries == r.recoveries
+    # a fault-free run carries none of this
+    r3 = run(Spec(protocol="lrscwait", n_cores=16, costs={"cycles": 400}))
+    assert r3.progress_ok is None
+    assert "progress_ok" not in r3.to_row()
+
+
+# ------------------------------------------------- sweep isolation
+
+def _specs(n=8, **kw):
+    base = Spec(protocol="lrscwait", n_cores=16, n_addrs=2,
+                costs={"cycles": 300}, **kw)
+    return [base.replace(seed=s) for s in range(n)]
+
+
+def test_poisoned_chunk_isolated(monkeypatch):
+    """One exploding chunk must not kill Study.stream(): the poison is
+    bisected down to its point, which yields a structured error record
+    while every other point yields its normal result."""
+    orig = sweep_mod._sweep_group
+
+    def poisoned(rep, dyn, batch):
+        if (np.asarray(dyn["seed"]) == 5).any():
+            raise RuntimeError("injected chunk failure")
+        return orig(rep, dyn, batch)
+
+    monkeypatch.setattr(sweep_mod, "_sweep_group", poisoned)
+    got = {r.spec.costs.seed: r for r in Study.from_specs(_specs()).stream()}
+    assert len(got) == 8
+    assert [s for s, r in got.items() if not r.ok] == [5]
+    rec = got[5]
+    assert "RuntimeError" in rec.error
+    assert rec.stats["error_stage"] == "dispatch"
+    assert "error" in rec.metrics()
+    good = got[0]
+    assert good.ok and good.throughput > 0
+    # healthy results match an unpoisoned run exactly
+    monkeypatch.setattr(sweep_mod, "_sweep_group", orig)
+    clean = {r.spec.costs.seed: r for r in
+             Study.from_specs(_specs()).stream()}
+    assert clean[0].throughput == good.throughput
+
+
+def test_poisoned_metrics_isolated(monkeypatch):
+    """A per-point metric-derivation failure downgrades to a solo retry
+    and then an error record — the rest of the chunk is untouched."""
+    orig = sweep_mod.derive_metrics
+    calls = {"n": 0}
+
+    def flaky(res, n_workers, cycles, energy_fit=None):
+        calls["n"] += 1
+        if int(np.asarray(res["ops"]).sum()) % 2 == 1 and calls["n"] < 99:
+            raise ValueError("derived on an odd total")
+        return orig(res, n_workers, cycles, energy_fit=energy_fit)
+
+    monkeypatch.setattr(sweep_mod, "derive_metrics", flaky)
+    got = {r.spec.costs.seed: r for r in Study.from_specs(_specs()).stream()}
+    assert len(got) == 8
+    # every point either derived fine or solo-retried into a result or
+    # an error record — the stream always completes
+    for r in got.values():
+        assert r.ok or "ValueError" in r.error
+
+
+def test_nonfinite_point_becomes_error_record(monkeypatch):
+    orig = sweep_mod.derive_metrics
+
+    def nanify(res, n_workers, cycles, energy_fit=None):
+        out = orig(res, n_workers, cycles, energy_fit=energy_fit)
+        out["throughput"] = float("nan")
+        return out
+
+    monkeypatch.setattr(sweep_mod, "derive_metrics", nanify)
+    got = list(Study.from_specs(_specs(n=2)).stream())
+    assert len(got) == 2
+    for r in got:
+        assert not r.ok
+        assert r.stats["error_stage"] == "nonfinite"
+
+
+# ------------------------------------------------- perfetto overlay
+
+def test_perfetto_fault_overlay():
+    from repro.obs import perfetto
+    s = Spec(protocol="lrscwait", n_cores=16, n_addrs=2,
+             costs={"cycles": 1500, "record_trace": True},
+             faults=FaultPlan(n_kill=1, kill_cyc=200, watchdog_cyc=0,
+                              progress_cyc=300, n_bank_stall=1,
+                              bank_stall_cyc=100, bank_stall_dur=50))
+    r = run(s)
+    ev = perfetto.to_trace_events(r)
+    names = {e["name"] for e in ev}
+    assert "DEAD" in names               # killed core span
+    assert "BANK_STALL" in names
+    assert "HALT" in names               # watchdog off -> detected halt
+    dead = [e for e in ev if e["name"] == "DEAD"]
+    assert all(e["cat"] == "fault" for e in dead)

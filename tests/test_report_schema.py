@@ -57,6 +57,52 @@ def test_summary_trend_flags_hold(summary):
     assert head["min_lrsc_over_colibri_energy_256"] > 1.0
 
 
+FAULTS_REPORT = os.path.join(REPORTS_DIR, "benchmarks.faults.json")
+
+
+@pytest.fixture(scope="module")
+def faults():
+    if not os.path.exists(FAULTS_REPORT):
+        pytest.skip(f"no faults report at {FAULTS_REPORT}; generate with "
+                    "`benchmarks/run.py --only faults`")
+    with open(FAULTS_REPORT) as f:
+        return json.load(f)["faults"]
+
+
+def test_fault_rows_carry_degradation_columns(faults):
+    """Every faults-benchmark row reports the graceful-degradation
+    metric set, and the liveness-contrast rows additionally carry the
+    retention ratio vs their healthy twin."""
+    rows = faults["rows"]
+    assert rows, "faults report has no rows"
+    for row in rows:
+        for k in ("progress_ok", "faults_injected", "recoveries",
+                  "stalled_cores", "survivor_throughput", "survivor_jain",
+                  "halt_cyc", "watchdog_cyc"):
+            assert k in row, (row["row"], k)
+        assert isinstance(row["progress_ok"], bool)
+        assert row["faults_injected"] >= 0 and row["recoveries"] >= 0
+        assert math.isfinite(row["survivor_throughput"])
+        assert 0.0 <= row["survivor_jain"] <= 1.0 + 1e-9
+        if row["row"].startswith("kill_"):
+            assert "throughput_retention" in row
+            assert math.isfinite(row["throughput_retention"])
+
+
+def test_fault_headline_liveness_contrast(faults):
+    """The headline invariant the README quotes: with the watchdog
+    every benchmarked protocol stays live under the owner kill; with it
+    off, every deadlockable protocol's halt is detected."""
+    head = faults["headline"]
+    assert (head["protocols_live_with_watchdog"]
+            == head["protocols_total"])
+    assert (head["deadlocks_detected_without_watchdog"]
+            == head["deadlockable_protocols"])
+    for k, v in head.items():
+        if k.endswith("_retention_lrscwait") or k.startswith("kill_wd_"):
+            assert v > 0.0, (k, v)
+
+
 # ---------------------------------------------------------------------------
 # provenance: every generated report is attributable
 # ---------------------------------------------------------------------------

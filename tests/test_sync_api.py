@@ -198,9 +198,15 @@ def test_spec_replace_group_instance_plus_flat_field():
 def test_spec_covers_every_simparams_field():
     """Adding a SimParams field without classifying it into a Spec
     sub-group must fail loudly (the twin of the sweep's STATIC/DYN
-    coverage test)."""
+    coverage test).  The FaultPlan group is the one non-flattened
+    group: its flat fields all route through Spec, but they lower onto
+    the single ``SimParams.faults`` field."""
+    from repro.faults import FaultPlan
+    fault_fields = {f.name for f in dataclasses.fields(FaultPlan)}
     flat = set(_FLAT_TO_GROUP) | {"protocol", "workload"}
-    assert flat == {f.name for f in dataclasses.fields(SimParams)}
+    assert fault_fields <= set(_FLAT_TO_GROUP)
+    assert (flat - fault_fields) | {"faults"} == \
+        {f.name for f in dataclasses.fields(SimParams)}
 
 
 # ------------------------------------------------------------------ Result
