@@ -1,0 +1,60 @@
+"""``repro.analysis`` — static analysis & verification passes.
+
+Three passes turn the repo's correctness folklore into enforced
+checks, gated in CI via ``python -m repro.analysis --all``:
+
+* ``model`` (:mod:`repro.analysis.model_check`) — explicit-state model
+  checker: drives every registered protocol's plugin hooks over
+  exhaustive interleavings of tiny configurations and enforces the
+  protocol's declared :class:`~repro.core.protocols.base.Contract`
+  (mutual exclusion, no lost wakeups, polling-/retry-freedom, queue
+  conservation, watchdog-recovery soundness).
+* ``trace`` (:mod:`repro.analysis.trace_safety`) — jaxpr auditor: the
+  engine must trace to ONE scan with exactly the budgeted carries
+  (optional features statically elided when off), bounded scatter
+  counts in the hot body, and backend-parity of the output structure.
+* ``range`` (:mod:`repro.analysis.int_range`) — integer-range proofs:
+  the fused arbitration key's int32 guard is sound and tight (the PR 3
+  wrap, locked as a theorem), backoff arithmetic is bounded, and the
+  certification envelope matches the engine's validation bounds.
+
+Programmatic entry points::
+
+    from repro.analysis import run_passes
+    reports = run_passes(["model", "trace", "range"])
+    ok = all(r.ok for r in reports)
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.analysis import int_range, model_check, trace_safety
+from repro.analysis.report import (Finding, PassReport, all_findings,
+                                   summarize)
+
+PASSES = ("model", "trace", "range")
+
+
+def run_passes(passes: Optional[List[str]] = None, quick: bool = False,
+               protocols: Optional[List[str]] = None
+               ) -> List[PassReport]:
+    """Run the selected passes (default: all three) and return their
+    reports; a report with findings means the gate fails."""
+    sel = list(passes) if passes else list(PASSES)
+    unknown = [p for p in sel if p not in PASSES]
+    if unknown:
+        raise ValueError(f"unknown pass(es) {unknown}; available: "
+                         f"{', '.join(PASSES)}")
+    reports: List[PassReport] = []
+    if "model" in sel:
+        reports += model_check.check_all(quick=quick, protocols=protocols)
+    if "trace" in sel:
+        reports += trace_safety.check_all(quick=quick, protocols=protocols)
+    if "range" in sel:
+        reports += int_range.check_all(quick=quick)
+    return reports
+
+
+__all__ = ["Finding", "PassReport", "PASSES", "run_passes",
+           "all_findings", "summarize", "model_check", "trace_safety",
+           "int_range"]

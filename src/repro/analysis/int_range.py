@@ -1,0 +1,206 @@
+"""Integer-range analyzer: symbolic bounds for the engine's int32
+arithmetic over the certified Spec envelope (``sync.spec.
+ANALYSIS_BOUNDS``).
+
+The engine runs entirely in int32.  Two pieces of arithmetic can
+plausibly wrap and each has a static guard; this pass turns "we believe
+the guard is right" into a checked theorem:
+
+* **Fused arbitration key** — the FIFO arbiter encodes (arrival cycle,
+  rotation) as one key ``arr_cyc * (n + 1) + rot`` so a single
+  segment-min picks each bank's winner.  The seed engine assumed the
+  key always fit int32 — false at n=1024 past ~2M cycles (the PR 3
+  wrap) — so ``sim.fused_key_fits_int32(cycles, n)`` now routes long
+  horizons to the two-stage lexicographic arbiter.  This pass proves
+  the guard **sound** (guard true ⇒ the interval of every reachable
+  key stays below ``int32.max``) and **tight** (one more cycle than
+  :func:`max_safe_cycles` overflows, so the fused fast path is never
+  given up early) across the envelope's core counts.
+
+* **Backoff timer** — ``(backoff << min(streak, exp_cap) - 1) + jitter``
+  with ``jitter < 32``; bounded over the envelope
+  (``backoff <= 2**20``, ``backoff_exp <= 8``) it stays far below
+  ``int32.max``.
+
+Rules: ``key-overflow`` (unsound guard), ``guard-not-tight`` (fused
+path given up while provably safe, or taken when unsafe at the exact
+threshold), ``backoff-overflow``, ``envelope`` (``ANALYSIS_BOUNDS``
+drifted from the engine's own validation bounds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from repro.analysis.report import Finding, PassReport
+from repro.core import sim
+from repro.sync.spec import ANALYSIS_BOUNDS
+
+INT32_MAX = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """Inclusive integer interval with conservative arithmetic (exact
+    for the monotone non-negative operations the engine uses)."""
+    lo: int
+    hi: int
+
+    def __post_init__(self):
+        if self.lo > self.hi:
+            raise ValueError(f"empty interval [{self.lo}, {self.hi}]")
+
+    def __add__(self, o: "Interval") -> "Interval":
+        o = _as_iv(o)
+        return Interval(self.lo + o.lo, self.hi + o.hi)
+
+    def __mul__(self, o: "Interval") -> "Interval":
+        o = _as_iv(o)
+        corners = [self.lo * o.lo, self.lo * o.hi,
+                   self.hi * o.lo, self.hi * o.hi]
+        return Interval(min(corners), max(corners))
+
+    def shl(self, o: "Interval") -> "Interval":
+        o = _as_iv(o)
+        if self.lo < 0 or o.lo < 0:
+            raise ValueError("shift bounds require non-negative operands")
+        return Interval(self.lo << o.lo, self.hi << o.hi)
+
+    def fits_int32(self) -> bool:
+        return -(2**31) <= self.lo and self.hi <= INT32_MAX
+
+
+def _as_iv(x) -> Interval:
+    return x if isinstance(x, Interval) else Interval(int(x), int(x))
+
+
+# ---- fused arbitration key ----------------------------------------------
+def fused_key_interval(n: int, cycles: int) -> Interval:
+    """Range of ``arr_cyc * (n + 1) + rot`` over one run: the engine
+    stamps ``arr_cyc`` in ``[0, cycles - 1]`` and the rotation satisfies
+    ``rot <= n`` (``rot = (core + shift) % n`` plus the ``n`` sentinel
+    for no-winner lanes)."""
+    return (Interval(0, cycles - 1) * Interval(n + 1, n + 1)
+            + Interval(0, n))
+
+
+def max_safe_cycles(n: int) -> int:
+    """The exact largest horizon whose fused keys provably stay BELOW
+    the engine's int32 no-winner sentinel for ``n`` cores (one cycle of
+    headroom above the raw interval, so real keys always lose a min
+    against the sentinel) — the regression lock for the PR 3 wrap: for
+    n=1024 this is 2_095_104, i.e. the seed engine's silent wrap at
+    "~2M cycles"."""
+    return (INT32_MAX - n) // (n + 1)
+
+
+#: core counts checked explicitly: envelope corners, powers of two
+#: around the paper's scales, and the PR 3 bug's n=1024
+_N_SAMPLES = (1, 2, 3, 7, 64, 256, 1023, 1024, 1025, 4096, 16_384)
+
+
+def check_fused_key() -> PassReport:
+    rep = PassReport(pass_name="range", subject="fused-arbitration-key")
+    t0 = time.perf_counter()
+    n_lo, n_hi = ANALYSIS_BOUNDS["n_cores"]
+    cy_lo, cy_hi = ANALYSIS_BOUNDS["cycles"]
+    thresholds = {}
+    for n in _N_SAMPLES:
+        if not (n_lo <= n <= n_hi):
+            continue
+        t = max_safe_cycles(n)
+        thresholds[n] = t
+        # soundness: every horizon the guard admits keeps the whole key
+        # interval inside int32
+        for cycles in (cy_lo, min(t, cy_hi)):
+            if sim.fused_key_fits_int32(cycles, n) \
+                    and not fused_key_interval(n, cycles).fits_int32():
+                rep.findings.append(Finding(
+                    "range", "key-overflow", "fused-arbitration-key",
+                    f"guard admits n={n} cycles={cycles} but the key "
+                    f"interval {fused_key_interval(n, cycles)} leaves "
+                    f"int32"))
+        # tightness, both ways: the guard must accept the exact
+        # threshold (no premature fallback to the two-stage arbiter)
+        # and reject one past it (no wrap on the fast path)
+        if t <= cy_hi and not sim.fused_key_fits_int32(t, n):
+            rep.findings.append(Finding(
+                "range", "guard-not-tight", "fused-arbitration-key",
+                f"guard rejects n={n} cycles={t} although the key "
+                f"interval {fused_key_interval(n, t)} provably fits"))
+        if t + 1 <= cy_hi and sim.fused_key_fits_int32(t + 1, n):
+            rep.findings.append(Finding(
+                "range", "key-overflow", "fused-arbitration-key",
+                f"guard admits n={n} cycles={t + 1}, one past the "
+                f"provable threshold {t} — the PR 3 wrap"))
+    rep.stats["thresholds"] = thresholds
+    rep.stats["n1024_threshold"] = max_safe_cycles(1024)
+    rep.wall_s = time.perf_counter() - t0
+    return rep
+
+
+# ---- backoff timer ------------------------------------------------------
+def backoff_interval(backoff_hi: int, backoff_exp_hi: int) -> Interval:
+    """Range of ``(backoff << max(streak - 1, 0)) + jitter`` with
+    ``streak <= exp_cap <= backoff_exp`` and ``jitter = hash % 32``."""
+    shift = Interval(0, max(backoff_exp_hi - 1, 0))
+    return Interval(0, backoff_hi).shl(shift) + Interval(0, 31)
+
+
+def check_backoff() -> PassReport:
+    rep = PassReport(pass_name="range", subject="backoff-timer")
+    t0 = time.perf_counter()
+    bo_hi = ANALYSIS_BOUNDS["backoff"][1]
+    be_hi = ANALYSIS_BOUNDS["backoff_exp"][1]
+    iv = backoff_interval(bo_hi, be_hi)
+    rep.stats["interval"] = (iv.lo, iv.hi)
+    if not iv.fits_int32():
+        rep.findings.append(Finding(
+            "range", "backoff-overflow", "backoff-timer",
+            f"backoff timer interval {iv} leaves int32 inside the "
+            f"envelope (backoff<={bo_hi}, backoff_exp<={be_hi})"))
+    rep.wall_s = time.perf_counter() - t0
+    return rep
+
+
+# ---- envelope consistency ----------------------------------------------
+def check_envelope() -> PassReport:
+    """``ANALYSIS_BOUNDS`` must name real ``SimParams`` fields and its
+    lower bounds must match the engine's own validation floor — the
+    certificate is meaningless if it covers Specs the engine rejects
+    (or misses values it accepts)."""
+    rep = PassReport(pass_name="range", subject="analysis-envelope")
+    t0 = time.perf_counter()
+    fields = {f.name for f in dataclasses.fields(sim.SimParams)}
+    engine_lo = dict(sim.SimParams._BOUNDS)
+    for name, (lo, hi) in ANALYSIS_BOUNDS.items():
+        if name not in fields:
+            rep.findings.append(Finding(
+                "range", "envelope", "analysis-envelope",
+                f"{name!r} is not a SimParams field"))
+            continue
+        if lo > hi:
+            rep.findings.append(Finding(
+                "range", "envelope", "analysis-envelope",
+                f"{name}: empty envelope [{lo}, {hi}]"))
+        if name in engine_lo and lo < engine_lo[name]:
+            rep.findings.append(Finding(
+                "range", "envelope", "analysis-envelope",
+                f"{name}: envelope floor {lo} is below the engine's "
+                f"validation floor {engine_lo[name]} — certifying "
+                f"values the engine rejects"))
+    missing = [f for f, _ in sim.SimParams._BOUNDS
+               if f not in ANALYSIS_BOUNDS]
+    if missing:
+        rep.findings.append(Finding(
+            "range", "envelope", "analysis-envelope",
+            f"engine-validated fields {missing} have no certification "
+            f"envelope entry"))
+    rep.wall_s = time.perf_counter() - t0
+    return rep
+
+
+def check_all(quick: bool = False) -> List[PassReport]:
+    del quick                        # the range pass is always cheap
+    return [check_fused_key(), check_backoff(), check_envelope()]

@@ -1,0 +1,636 @@
+"""Protocol model checker: exhaustive small-scope exploration of the
+plugin hooks against each protocol's declared :class:`Contract`.
+
+The engine (``core.sim``) drives protocol plugins one arbitration
+winner per bank per cycle, plus wake-timer fires and (under fault
+plans) watchdog timeouts.  This checker re-drives the SAME hook surface
+— ``on_access`` + its kernel-fusable twin ``fused_access``, ``on_wake``,
+``held``/``on_timeout`` — over **every interleaving** of a tiny
+configuration (2-4 cores, 1-2 banks, 1-2 ops per core), with the
+engine's timing abstracted away: any pending request may be delivered
+next, any pending wake may fire next.  Timing abstraction makes the
+explored graph a superset of every real schedule, so a property that
+holds here holds for all engine schedules of the small config.
+
+Model per core: ``ACQ`` (acquire in flight) -> ``HOLD`` (granted,
+release in flight) -> back to ``ACQ`` (ops left) or ``DONE``; a parked
+core is ``SLEEP`` until a wake hands it ownership; the fault pass adds
+``DEAD``.  Ghost state the checker tracks independently of the
+protocol: per-bank owner, per-core ops-left.  Wake timers are
+normalized to pending flags (the model fires a pending wake by setting
+its bank's timer to 1 and every other pending bank's to 2, so one
+``on_wake`` call fires exactly the chosen bank).
+
+Checked rules (rule ids as reported):
+
+==========================  ============================================
+``handler-mismatch``        ``fused_access`` disagrees with ``on_access``
+                            (bank state, per-core protocol state, or the
+                            outcome code derived from the core writes)
+``lane-discipline``         ``on_access`` wrote a non-winner core's state
+``double-grant``            grant/wake while the bank has an owner
+                            (``exclusive_grant``)
+``foreign-release``         a release completed for a non-owner
+``phantom-outcome``         no outcome for a delivered winner, or an
+                            outcome illegal for the phase
+``retry-free``              ``OUT_FAIL`` from a ``retry_free`` protocol
+``fail-not-full``           ``OUT_FAIL`` with queue slots free
+                            (``fail_requires_full``)
+``unexpected-sleep``        ``OUT_SLEEP`` from a non-``wait_class``
+                            protocol
+``wake-corrupt``            a wake hit a core that was neither sleeping
+                            nor the bank's owner
+``queue-conservation``      ``queue_depth`` != sleepers (+ holder when
+                            ``queue_counts_holder``)
+``lost-wakeup``             terminal state with a live core asleep
+``deadlock``                terminal state with live undone cores awake
+``completion-unreachable``  a reachable state with NO path to all-done
+``live-evict``              ``on_timeout`` evicted with every core live
+                            (without ``evict_live_safe``)
+``recovery-deadlock``       after a holder death, live cores cannot all
+                            finish even with the watchdog
+==========================  ============================================
+
+The fault pass (``kill=True``) additionally branches a holder death at
+every ownership acquisition and enables the watchdog event on held
+banks with no live in-flight owner — the small-scope version of the
+PR 8 stale-owner scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protocols import registry as proto_registry
+from repro.core.protocols.base import (MOD, OUT_DONE, OUT_EVICT, OUT_FAIL,
+                                       OUT_GRANT, OUT_NONE, OUT_SLEEP,
+                                       P_ACQ, P_REL, REQ, RESP, SLEEP, WORK,
+                                       NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
+                                       Ctx, FusedCtx)
+from repro.analysis.report import Finding, PassReport
+
+# model core modes
+M_ACQ, M_HOLD, M_SLEEP, M_DONE, M_DEAD = 0, 1, 2, 3, 4
+_MODE_CH = "AHSDX"
+
+#: exploration safety valve — the tiny configs stay well under this
+MAX_STATES = 250_000
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """One small-scope configuration: ``wa`` maps core -> home bank."""
+    n: int
+    a: int = 1
+    ops: int = 2
+    q_slots: int = 64
+    n_groups: int = 2
+
+    @property
+    def wa(self) -> Tuple[int, ...]:
+        return tuple(c % self.a for c in range(self.n))
+
+    def label(self) -> str:
+        return (f"n={self.n} a={self.a} ops={self.ops} q={self.q_slots}"
+                f" g={self.n_groups}")
+
+
+class _P:
+    """Static parameter namespace handed to the hooks (the model has no
+    clock, so the latency knobs only have to be positive)."""
+
+    def __init__(self, cfg: Config):
+        self.lat = 1
+        self.work = 1
+        self.modify = 1
+        self.q_slots = cfg.q_slots
+        self.n_groups = cfg.n_groups
+
+
+def configs_for(name: str, quick: bool = False) -> List[Config]:
+    """Small-scope grid per protocol.  ``lrscwait`` adds a q=1 config
+    (the finite-queue FAIL path); ``colibri_hier`` adds a 4-core
+    2-bank 2-group config (cross-bank queue aliasing is invisible with
+    a single bank — the PR 6 lesson)."""
+    if name == "colibri_hier":
+        cfgs = [Config(n=3, a=1, ops=2, n_groups=2),
+                Config(n=4, a=2, ops=1, n_groups=2)]
+        return cfgs[:1] if quick else cfgs
+    base = [Config(n=2, a=1, ops=2), Config(n=3, a=1, ops=2),
+            Config(n=3, a=2, ops=1)]
+    if name == "lrscwait":
+        base.insert(1, Config(n=2, a=1, ops=2, q_slots=1))
+        return [base[0], base[1]] if quick else base
+    return base[:1] if quick else base
+
+
+@dataclasses.dataclass
+class _State:
+    modes: Tuple[int, ...]
+    ops: Tuple[int, ...]
+    owner: Tuple[int, ...]           # per bank; -1 = none
+    bank: Dict[str, np.ndarray]
+    xc: Dict[str, np.ndarray]
+
+    def key(self) -> bytes:
+        parts = [bytes(self.modes), bytes(o % 256 for o in self.ops),
+                 bytes((o + 1) % 256 for o in self.owner)]
+        for k in sorted(self.bank):
+            parts.append(self.bank[k].tobytes())
+        for k in sorted(self.xc):
+            parts.append(self.xc[k].tobytes())
+        return b"|".join(parts)
+
+    def label(self) -> str:
+        return ("cores=" + "".join(_MODE_CH[m] for m in self.modes)
+                + " ops=" + "".join(str(o) for o in self.ops)
+                + " owner=" + ",".join(str(o) for o in self.owner))
+
+
+def _normalize(bank: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Wake timers carry delays in the engine; the model only cares
+    whether a wake is pending."""
+    if "wake_tmr" in bank:
+        bank = dict(bank)
+        bank["wake_tmr"] = (bank["wake_tmr"] > 0).astype(np.int32)
+    return bank
+
+
+def _get(tree):
+    return jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+
+
+class _Kernels:
+    """Jitted hook drivers for one (protocol, config) pair.  Compiled
+    once; every explored transition is then a sub-millisecond call."""
+
+    def __init__(self, proto, cfg: Config):
+        self.proto, self.cfg = proto, cfg
+        p = _P(cfg)
+        n, a = cfg.n, cfg.a
+        q_cap = proto.q_cap(p, n)
+        self.p, self.q_cap = p, q_cap
+        wa = jnp.asarray(cfg.wa, jnp.int32)
+        wc = jnp.arange(n, dtype=jnp.int32)
+        ba = jnp.arange(a, dtype=jnp.int32)
+        self.init_bank = _normalize(_get(proto.init_bank_state(p, a, n,
+                                                               q_cap)))
+        self.init_xc = _get(proto.init_core_state(p, n))
+        xc_keys = tuple(self.init_xc)
+
+        def _cs(st, xc):
+            cs = dict(st=st.astype(jnp.int32),
+                      tmr=jnp.zeros((n,), jnp.int32),
+                      nxt=jnp.full((n,), -1, jnp.int32),
+                      polls=jnp.zeros((), jnp.int32),
+                      msgs=jnp.zeros((), jnp.int32))
+            cs.update(xc)
+            return cs
+
+        def _ctx(is_acq, is_rel, win, acq_b, rel_b):
+            return Ctx(p=p, n=n, a=a, q_cap=q_cap, is_acq=is_acq,
+                       is_rel=is_rel, wa=wa, wc=wc, ba=ba, win_core=win,
+                       acq_b=acq_b, rel_b=rel_b,
+                       mod_dur=jnp.ones((n,), jnp.int32))
+
+        def deliver(bank, xc, st, c, phase):
+            onehot = wc == c
+            is_acq = onehot & (phase == P_ACQ)
+            is_rel = onehot & (phase == P_REL)
+            b = wa[c]
+            hit = ba == b
+            win = jnp.where(hit, c, n).astype(jnp.int32)
+            acq_b = hit & (phase == P_ACQ)
+            rel_b = hit & (phase == P_REL)
+            cs = _cs(jnp.where(onehot, REQ, st), xc)
+            cs2, bank2 = self.proto.on_access(
+                _ctx(is_acq, is_rel, win, acq_b, rel_b), dict(cs),
+                dict(bank))
+            stc, nxtc = cs2["st"][c], cs2["nxt"][c]
+            out = jnp.where(
+                stc == SLEEP, OUT_SLEEP,
+                jnp.where((stc == RESP) & (nxtc == NXT_MOD), OUT_GRANT,
+                jnp.where((stc == RESP) & (nxtc == NXT_WORK_DONE), OUT_DONE,
+                jnp.where((stc == RESP) & (nxtc == NXT_BACKOFF), OUT_FAIL,
+                          OUT_NONE)))).astype(jnp.int32)
+            off = ~onehot
+            touched = jnp.any(off & (cs2["st"] != cs["st"])) \
+                | jnp.any(off & (cs2["nxt"] != -1)) \
+                | jnp.any(off & (cs2["tmr"] != 0))
+            for k in xc_keys:
+                touched = touched | jnp.any(off & (cs2[k] != xc[k]))
+            # fused twin on the same pre-state
+            fcore = {k: xc[k][jnp.minimum(win, n - 1)]
+                     for k in self.proto.fused_core_fields}
+            bank3, fo = self.proto.fused_access(
+                FusedCtx(p=p, n=n, a=a, q_cap=q_cap, win=win,
+                         acq_b=acq_b, rel_b=rel_b, core=fcore),
+                dict(bank))
+            xc3 = dict(xc)
+            for k, (vals, msk) in fo.xset.items():
+                xc3[k] = xc3[k].at[jnp.where(msk, win, n)].set(
+                    vals, mode="drop")
+            agree = jnp.asarray(True)
+            for k in bank:
+                agree = agree & jnp.all(bank2[k] == bank3[k])
+            for k in xc_keys:
+                agree = agree & jnp.all(cs2[k] == xc3[k])
+            agree = agree & (out == fo.kind[b])
+            xc2 = {k: cs2[k] for k in xc_keys}
+            return bank2, xc2, out, fo.kind[b], agree, touched
+
+        def wake(bank, xc, st, b):
+            pend = bank["wake_tmr"] > 0
+            bank_in = dict(bank, wake_tmr=jnp.where(
+                ba == b, 1, jnp.where(pend, 2, 0)).astype(jnp.int32))
+            z = jnp.zeros((n,), bool)
+            zb = jnp.zeros((a,), bool)
+            cs = _cs(st, xc)
+            cs2, bank2, _ = self.proto.on_wake(
+                _ctx(z, z, jnp.full((a,), n, jnp.int32), zb, zb),
+                dict(cs), bank_in)
+            woken = cs2["st"] == MOD
+            return bank2, {k: cs2[k] for k in xc_keys}, woken
+
+        def timeout(bank, xc, st, stuck_b, killed, owner_arr):
+            z = jnp.zeros((n,), bool)
+            zb = jnp.zeros((a,), bool)
+            cs = _cs(st, xc)
+            cs2, bank2, kind = self.proto.on_timeout(
+                _ctx(z, z, jnp.full((a,), n, jnp.int32), zb, zb),
+                dict(cs), dict(bank), stuck_b, killed, owner_arr)
+            return bank2, {k: cs2[k] for k in xc_keys}, kind
+
+        self.deliver = jax.jit(deliver)
+        self.wake = jax.jit(wake)
+        self.timeout = jax.jit(timeout)
+        self.has_wake = "wake_tmr" in self.init_bank
+        self.has_held = proto.held(
+            jax.tree_util.tree_map(jnp.asarray, self.init_bank)) is not None
+
+    def held_np(self, bank) -> np.ndarray:
+        h = self.proto.held(jax.tree_util.tree_map(jnp.asarray, bank))
+        return np.asarray(_get(h))
+
+    def qdepth_np(self, bank) -> Optional[np.ndarray]:
+        qd = self.proto.queue_depth(
+            jax.tree_util.tree_map(jnp.asarray, bank))
+        return None if qd is None else np.asarray(_get(qd))
+
+
+def _st_in(modes: Tuple[int, ...]) -> np.ndarray:
+    return np.asarray([SLEEP if m == M_SLEEP else WORK for m in modes],
+                      np.int32)
+
+
+class _Explorer:
+    """BFS over the interleaving graph of one (protocol, config)."""
+
+    def __init__(self, proto, cfg: Config, kill: bool,
+                 kernels: Optional[_Kernels] = None):
+        self.proto, self.cfg, self.kill = proto, cfg, kill
+        self.kn = kernels or _Kernels(proto, cfg)
+        self.contract = proto.contract
+        self.findings: Dict[str, Finding] = {}
+        self.counts: Dict[str, int] = {}
+        self.transitions = 0
+        self._probed: set = set()
+
+    # ---- findings --------------------------------------------------------
+    def _flag(self, rule: str, detail: str, state: _State) -> None:
+        self.counts[rule] = self.counts.get(rule, 0) + 1
+        if rule not in self.findings:
+            mode = "fault pass" if self.kill else "normal pass"
+            self.findings[rule] = Finding(
+                pass_name="model", rule=rule, subject=self.proto.name,
+                detail=detail,
+                where=f"{self.cfg.label()} ({mode}) at {state.label()}")
+
+    # ---- invariants ------------------------------------------------------
+    def _check_state(self, s: _State) -> None:
+        qd = self.kn.qdepth_np(s.bank)
+        if qd is not None:
+            for b in range(self.cfg.a):
+                exp = sum(1 for c in range(self.cfg.n)
+                          if s.modes[c] == M_SLEEP and self.cfg.wa[c] == b)
+                if self.contract.queue_counts_holder and s.owner[b] >= 0:
+                    exp += 1
+                if int(qd[b]) != exp:
+                    self._flag("queue-conservation",
+                               f"bank {b}: queue_depth={int(qd[b])} but "
+                               f"{exp} cores are accounted for (sleepers"
+                               + (" + holder" if
+                                  self.contract.queue_counts_holder else "")
+                               + ")", s)
+        # live-owner watchdog probe (non-mutating, deduped by bank state)
+        if self.kn.has_held and not self.contract.evict_live_safe:
+            bkey = b"".join(s.bank[k].tobytes() for k in sorted(s.bank))
+            if bkey not in self._probed:
+                self._probed.add(bkey)
+                held = self.kn.held_np(s.bank)
+                if held.any():
+                    owner_arr = np.asarray(
+                        [o if o >= 0 else self.cfg.n for o in s.owner],
+                        np.int32)
+                    _, _, kind = _get(self.kn.timeout(
+                        s.bank, s.xc, _st_in(s.modes), jnp.asarray(held),
+                        jnp.zeros((self.cfg.n,), bool),
+                        jnp.asarray(owner_arr)))
+                    if (np.asarray(kind) == OUT_EVICT).any():
+                        self._flag(
+                            "live-evict",
+                            "on_timeout returned OUT_EVICT with every core "
+                            "alive — the watchdog would evict a live owner "
+                            "(declare evict_live_safe only if that is safe "
+                            "by construction, like lrsc slot expiry)", s)
+
+    # ---- transitions -----------------------------------------------------
+    def _apply_deliver(self, s: _State, c: int, phase: int
+                       ) -> Optional[_State]:
+        kn, cfg, ct = self.kn, self.cfg, self.contract
+        b = cfg.wa[c]
+        bank2, xc2, out, kind, agree, touched = _get(kn.deliver(
+            s.bank, s.xc, _st_in(s.modes), jnp.int32(c), jnp.int32(phase)))
+        out, kind = int(out), int(kind)
+        if not bool(agree):
+            self._flag("handler-mismatch",
+                       f"core {c} phase {'acq' if phase == P_ACQ else 'rel'}"
+                       f": on_access outcome {out} / fused_access kind "
+                       f"{kind} or diverging state", s)
+        if bool(touched):
+            self._flag("lane-discipline",
+                       f"on_access for winner {c} wrote another core's "
+                       f"state", s)
+        modes, ops, owner = list(s.modes), list(s.ops), list(s.owner)
+        if out == OUT_NONE:
+            self._flag("phantom-outcome",
+                       f"delivered winner {c} got no outcome", s)
+            return None
+        if phase == P_ACQ:
+            if out == OUT_GRANT:
+                if ct.exclusive_grant and owner[b] >= 0:
+                    self._flag("double-grant",
+                               f"core {c} granted bank {b} while core "
+                               f"{owner[b]} still owns it", s)
+                owner[b] = c
+                modes[c] = M_HOLD
+            elif out == OUT_DONE:       # single-access commit (amo)
+                if ct.exclusive_grant and owner[b] >= 0:
+                    self._flag("double-grant",
+                               f"core {c} committed at bank {b} while core "
+                               f"{owner[b]} owns it", s)
+                ops[c] -= 1
+                modes[c] = M_ACQ if ops[c] > 0 else M_DONE
+            elif out == OUT_SLEEP:
+                if not ct.wait_class:
+                    self._flag("unexpected-sleep",
+                               f"non-wait protocol parked core {c}", s)
+                modes[c] = M_SLEEP
+            elif out == OUT_FAIL:
+                if ct.retry_free:
+                    self._flag("retry-free",
+                               f"retry-free protocol failed core {c}'s "
+                               f"acquire (a poll)", s)
+                elif ct.fail_requires_full:
+                    occupied = sum(
+                        1 for k in range(cfg.n)
+                        if s.modes[k] == M_SLEEP and cfg.wa[k] == b)
+                    if ct.queue_counts_holder and s.owner[b] >= 0:
+                        occupied += 1
+                    if occupied < kn.q_cap:
+                        self._flag(
+                            "fail-not-full",
+                            f"core {c} rejected at bank {b} with only "
+                            f"{occupied}/{kn.q_cap} queue slots used", s)
+                # retry: the model redelivers later
+            else:
+                self._flag("phantom-outcome",
+                           f"acquire outcome {out} for core {c}", s)
+        else:
+            if out == OUT_DONE:
+                if ct.exclusive_grant and owner[b] != c:
+                    self._flag("foreign-release",
+                               f"core {c} completed a release on bank {b} "
+                               f"owned by {owner[b]}", s)
+                if owner[b] == c:
+                    owner[b] = -1
+                ops[c] -= 1
+                modes[c] = M_ACQ if ops[c] > 0 else M_DONE
+            elif out == OUT_FAIL:        # failed SC: full retry
+                if ct.retry_free:
+                    self._flag("retry-free",
+                               f"retry-free protocol failed core {c}'s "
+                               f"release", s)
+                modes[c] = M_ACQ
+            else:
+                self._flag("phantom-outcome",
+                           f"release outcome {out} for core {c}", s)
+        return _State(tuple(modes), tuple(ops), tuple(owner),
+                      _normalize(bank2), xc2)
+
+    def _apply_wake(self, s: _State, b: int) -> Optional[_State]:
+        cfg, ct = self.cfg, self.contract
+        bank2, xc2, woken = _get(self.kn.wake(s.bank, s.xc,
+                                              _st_in(s.modes),
+                                              jnp.int32(b)))
+        woken = np.asarray(woken)
+        modes, ops, owner = list(s.modes), list(s.ops), list(s.owner)
+        for c in np.nonzero(woken)[0]:
+            c = int(c)
+            wb = cfg.wa[c]
+            if s.modes[c] == M_SLEEP:
+                if ct.exclusive_grant and owner[wb] >= 0:
+                    self._flag("double-grant",
+                               f"wake handed bank {wb} to core {c} while "
+                               f"core {owner[wb]} owns it", s)
+                owner[wb] = c
+                modes[c] = M_HOLD
+            elif s.owner[wb] == c:
+                pass                     # redelivered wake to the owner
+            elif s.modes[c] == M_DEAD:
+                owner[wb] = c            # wake reached a dead sleeper
+            else:
+                self._flag("wake-corrupt",
+                           f"wake of bank {b} hit core {c} "
+                           f"({_MODE_CH[s.modes[c]]}) which was neither "
+                           f"asleep nor bank {wb}'s owner", s)
+        return _State(tuple(modes), tuple(ops), tuple(owner),
+                      _normalize(bank2), xc2)
+
+    def _apply_watchdog(self, s: _State, b: int) -> Optional[_State]:
+        cfg = self.cfg
+        killed = np.asarray([m == M_DEAD for m in s.modes], bool)
+        owner_arr = np.asarray([o if o >= 0 else cfg.n for o in s.owner],
+                               np.int32)
+        stuck = np.zeros((cfg.a,), bool)
+        stuck[b] = True
+        bank2, xc2, kind = _get(self.kn.timeout(
+            s.bank, s.xc, _st_in(s.modes), jnp.asarray(stuck),
+            jnp.asarray(killed), jnp.asarray(owner_arr)))
+        kind = np.asarray(kind)
+        modes, ops, owner = list(s.modes), list(s.ops), list(s.owner)
+        if int(kind[b]) == OUT_EVICT:
+            # for evict_live_safe protocols (lrsc slot expiry) the ghost
+            # owner is the last grantee, not the resource holder, so the
+            # live-owner attribution below would be unsound
+            if (not self.contract.evict_live_safe
+                    and owner[b] >= 0 and s.modes[owner[b]] != M_DEAD):
+                self._flag("live-evict",
+                           f"watchdog evicted bank {b}'s live owner "
+                           f"{owner[b]}", s)
+            owner[b] = -1
+        return _State(tuple(modes), tuple(ops), tuple(owner),
+                      _normalize(bank2), xc2)
+
+    # ---- events ----------------------------------------------------------
+    def _events(self, s: _State) -> List[Tuple]:
+        evs: List[Tuple] = []
+        for c in range(self.cfg.n):
+            if s.modes[c] == M_ACQ:
+                evs.append(("deliver", c, P_ACQ))
+            elif s.modes[c] == M_HOLD:
+                evs.append(("deliver", c, P_REL))
+        if self.kn.has_wake:
+            for b in np.nonzero(s.bank["wake_tmr"] > 0)[0]:
+                evs.append(("wake", int(b)))
+        if self.kill:
+            died = any(m == M_DEAD for m in s.modes)
+            if not died:
+                for c in range(self.cfg.n):
+                    if s.modes[c] == M_HOLD:
+                        evs.append(("die", c))
+            elif self.kn.has_held:
+                held = self.kn.held_np(s.bank)
+                for b in range(self.cfg.a):
+                    if not held[b]:
+                        continue
+                    live_inflight = any(
+                        s.modes[c] == M_HOLD and self.cfg.wa[c] == b
+                        for c in range(self.cfg.n))
+                    if not live_inflight:
+                        evs.append(("watchdog", b))
+        return evs
+
+    def _apply(self, s: _State, ev: Tuple) -> Optional[_State]:
+        if ev[0] == "deliver":
+            return self._apply_deliver(s, ev[1], ev[2])
+        if ev[0] == "wake":
+            return self._apply_wake(s, ev[1])
+        if ev[0] == "die":
+            modes = list(s.modes)
+            modes[ev[1]] = M_DEAD
+            return _State(tuple(modes), s.ops, s.owner, s.bank, s.xc)
+        return self._apply_watchdog(s, ev[1])
+
+    # ---- main loop -------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        init = _State(tuple([M_ACQ] * self.cfg.n),
+                      tuple([self.cfg.ops] * self.cfg.n),
+                      tuple([-1] * self.cfg.a),
+                      dict(self.kn.init_bank), dict(self.kn.init_xc))
+        seen: Dict[bytes, _State] = {init.key(): init}
+        succs: Dict[bytes, List[bytes]] = {}
+        frontier = deque([init.key()])
+        self._check_state(init)
+        while frontier and not self.findings:
+            k = frontier.popleft()
+            s = seen[k]
+            out: List[bytes] = []
+            for ev in self._events(s):
+                self.transitions += 1
+                s2 = self._apply(s, ev)
+                if s2 is None:
+                    continue
+                k2 = s2.key()
+                if k2 == k:
+                    continue
+                out.append(k2)
+                if k2 not in seen:
+                    if len(seen) >= MAX_STATES:
+                        raise RuntimeError(
+                            f"{self.proto.name}/{self.cfg.label()}: state "
+                            f"space exceeded {MAX_STATES}")
+                    seen[k2] = s2
+                    self._check_state(s2)
+                    frontier.append(k2)
+            succs[k] = out
+            if not out and not self._all_done(s):
+                asleep = [c for c in range(self.cfg.n)
+                          if s.modes[c] == M_SLEEP]
+                rule = ("recovery-deadlock" if self.kill and
+                        any(m == M_DEAD for m in s.modes)
+                        else "lost-wakeup" if asleep else "deadlock")
+                self._flag(rule,
+                           "terminal state with live unfinished cores"
+                           + (f" (cores {asleep} asleep, no wake pending)"
+                              if asleep else ""), s)
+        if not self.findings:
+            self._reverse_check(seen, succs)
+        return dict(states=len(seen), transitions=self.transitions,
+                    findings=list(self.findings.values()),
+                    counts=dict(self.counts))
+
+    def _all_done(self, s: _State) -> bool:
+        return all(m in (M_DONE, M_DEAD) for m in s.modes)
+
+    def _reverse_check(self, seen, succs) -> None:
+        """Every reachable state must have SOME path on which all live
+        cores finish — the liveness half of no-lost-wakeup / recovery."""
+        rev: Dict[bytes, List[bytes]] = {k: [] for k in seen}
+        for k, outs in succs.items():
+            for k2 in outs:
+                rev[k2].append(k)
+        good = deque(k for k, s in seen.items() if self._all_done(s))
+        ok = set(good)
+        while good:
+            for pk in rev[good.popleft()]:
+                if pk not in ok:
+                    ok.add(pk)
+                    good.append(pk)
+        bad = [k for k in seen if k not in ok]
+        if bad:
+            rule = "recovery-deadlock" if self.kill \
+                else "completion-unreachable"
+            self._flag(rule,
+                       f"{len(bad)} of {len(seen)} reachable states have "
+                       f"no path to completion", seen[bad[0]])
+
+
+def check_protocol(proto, quick: bool = False, kill: bool = True,
+                   configs: Optional[List[Config]] = None) -> PassReport:
+    """Model-check one protocol (a registered name or a ``Protocol``
+    instance) over its small-scope configs; the fault pass runs too
+    unless ``kill=False`` or the protocol has no held state."""
+    if isinstance(proto, str):
+        proto = proto_registry.get(proto)
+    rep = PassReport(pass_name="model", subject=proto.name)
+    t0 = time.perf_counter()
+    states = transitions = 0
+    counts: Dict[str, int] = {}
+    for cfg in (configs if configs is not None
+                else configs_for(proto.name, quick)):
+        kn = _Kernels(proto, cfg)
+        passes = [False] + ([True] if kill and kn.has_held else [])
+        for kmode in passes:
+            r = _Explorer(proto, cfg, kmode, kernels=kn).run()
+            states += r["states"]
+            transitions += r["transitions"]
+            rep.findings.extend(r["findings"])
+            for rule, cnt in r["counts"].items():
+                counts[rule] = counts.get(rule, 0) + cnt
+    rep.stats = dict(states=states, transitions=transitions,
+                     violation_counts=counts)
+    rep.wall_s = time.perf_counter() - t0
+    return rep
+
+
+def check_all(quick: bool = False, kill: bool = True,
+              protocols: Optional[List[str]] = None) -> List[PassReport]:
+    names = protocols or proto_registry.names()
+    return [check_protocol(nm, quick=quick, kill=kill) for nm in names]

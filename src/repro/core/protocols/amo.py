@@ -9,13 +9,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_WORK_DONE, OUT_DONE, OUT_NONE,
-                                       RESP, FusedOut, Protocol)
+                                       RESP, Contract, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
 @register
 class Amo(Protocol):
     name = "amo"
+    # one access commits the op: no retries, no waiting, nothing held
+    contract = Contract(exclusive_grant=True, retry_free=True,
+                        wait_class=False, max_hot_scatters=2)
 
     def on_access(self, ctx, cs, bank):
         p = ctx.p

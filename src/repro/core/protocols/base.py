@@ -51,6 +51,53 @@ OUT_NONE, OUT_GRANT, OUT_DONE, OUT_FAIL, OUT_SLEEP = 0, 1, 2, 3, 4
 OUT_EVICT, OUT_REDELIVER = 5, 6
 
 
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Machine-checkable protocol contract, consumed by the static-
+    analysis subsystem (``repro.analysis``).
+
+    Every registered protocol declares one.  The model checker
+    (``repro.analysis.model_check``) drives the protocol's hooks over
+    exhaustive interleavings of tiny configurations and enforces the
+    rules the flags enable; the trace auditor
+    (``repro.analysis.trace_safety``) enforces the scatter budget.
+    These are the paper's claims (polling-freedom, retry-freedom, no
+    lost wakeups) stated per protocol as checkable obligations instead
+    of repo folklore.
+    """
+    #: OUT_GRANT (or a wake) hands EXCLUSIVE ownership: at most one
+    #: core may hold a bank at any time, and only the holder's release
+    #: may complete.  False for bare LR/SC, where every LR is answered
+    #: and non-owners only discover failure at the SC.
+    exclusive_grant: bool = True
+    #: retry-free: OUT_FAIL is unreachable when queues are sized for
+    #: the core count (colibri's unbounded queue, amo's single access).
+    retry_free: bool = False
+    #: wait-class: contenders are parked with OUT_SLEEP and woken by
+    #: the protocol (polling-free) instead of polling via OUT_FAIL.
+    wait_class: bool = False
+    #: OUT_FAIL is legal ONLY when the bank's queue is full — the
+    #: lrscwait finite-q capacity collapse.  Checked against the model
+    #: checker's independently tracked waiter count.
+    fail_requires_full: bool = False
+    #: ``on_timeout`` may act on a bank whose owner is LIVE (lrsc's
+    #: unconditional reservation expiry is safe by construction: a live
+    #: owner just sees its SC fail and retries).  Protocols without
+    #: this flag must never return OUT_EVICT for a live owner — that is
+    #: the stale-owner class of bug (PR 8).
+    evict_live_safe: bool = False
+    #: ``queue_depth`` counts the current holder as well as the
+    #: sleepers (lrscwait/colibri/mwait grantees enqueue and are popped
+    #: at release; colibri_hier grantees bypass the local queues).
+    #: Only meaningful for queue protocols.
+    queue_counts_holder: bool = True
+    #: trace-safety budget: scatter-family ops allowed in the hot scan
+    #: body on the reference config (xla_cpu, dense arbitration, no
+    #: faults/telemetry/trace).  A regression that reintroduces n-lane
+    #: scatters into the hot path fails the audit, not a benchmark.
+    max_hot_scatters: int = 0
+
+
 def mset(arr, idx, mask, val):
     """Masked scatter-set: only lanes with mask write; others dropped
     (out-of-bounds index). Avoids duplicate-index races."""
@@ -153,6 +200,9 @@ class Protocol:
     """Base protocol plugin. Subclasses override the hooks they need."""
 
     name: str = ""
+    #: machine-checkable contract (see :class:`Contract`) enforced by
+    #: ``python -m repro.analysis``; subclasses override.
+    contract: Contract = Contract()
     #: queue-based protocols get the engine's wake pass and their wake-up
     #: responses counted against next cycle's network budget.
     uses_queue: bool = False

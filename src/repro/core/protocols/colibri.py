@@ -7,6 +7,7 @@ SuccessorUpdates add network traffic.
 """
 from __future__ import annotations
 
+from repro.core.protocols.base import Contract
 from repro.core.protocols.lrscwait import LrscWait
 from repro.core.protocols.registry import register
 
@@ -15,6 +16,11 @@ from repro.core.protocols.registry import register
 class Colibri(LrscWait):
     name = "colibri"
     successor_updates = True
+    # the distributed queue never fills (q = N), so unlike finite-q
+    # lrscwait the protocol is fully retry-free: OUT_FAIL unreachable
+    contract = Contract(exclusive_grant=True, wait_class=True,
+                        retry_free=True, queue_counts_holder=True,
+                        max_hot_scatters=4)
 
     def q_cap(self, p, n):
         return n                             # distributed queue never fills

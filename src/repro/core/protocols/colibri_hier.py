@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.core.protocols.base import (MOD, NXT_MOD, NXT_WORK_DONE, OUT_DONE,
                                        OUT_EVICT, OUT_GRANT, OUT_NONE,
                                        OUT_REDELIVER, OUT_SLEEP, RESP, SLEEP,
-                                       FusedOut, Protocol)
+                                       Contract, FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -35,6 +35,13 @@ class ColibriHier(Protocol):
     name = "colibri_hier"
     uses_queue = True
     local_delay = 2          # intra-cluster Qnode bounce
+    # retry-free wait-class like flat colibri, but grantees bypass the
+    # local queues (woken heads are popped), so queue_depth counts the
+    # sleepers ONLY — the conservation rule the PR 6 wake_grp aliasing
+    # bug violated
+    contract = Contract(exclusive_grant=True, wait_class=True,
+                        retry_free=True, queue_counts_holder=False,
+                        max_hot_scatters=12)
 
     @staticmethod
     def _geom(p, n):

@@ -18,14 +18,18 @@ import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
                                        OUT_DONE, OUT_EVICT, OUT_FAIL,
-                                       OUT_GRANT, OUT_NONE, RESP, FusedOut,
-                                       Protocol)
+                                       OUT_GRANT, OUT_NONE, RESP, Contract,
+                                       FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
 class SpinLock(Protocol):
     fixed_backoff = True
     lr_pair = False          # lrsc_lock: LR+SC = two round trips per attempt
+    # test&set semantics: the lock grant is exclusive, but losers poll
+    # (OUT_FAIL → backoff → retry) — the paper's retry-traffic baseline
+    contract = Contract(exclusive_grant=True, retry_free=False,
+                        wait_class=False, max_hot_scatters=2)
 
     def init_bank_state(self, p, a, n, q_cap):
         return dict(lock=jnp.zeros((a,), bool))
@@ -97,6 +101,10 @@ class LrscLock(SpinLock):
 class TicketLock(Protocol):
     name = "ticket_lock"
     fixed_backoff = True
+    # polling like the spin locks (re-polls fail until `serving`
+    # matches), but grants are exclusive and strictly ticket-ordered
+    contract = Contract(exclusive_grant=True, retry_free=False,
+                        wait_class=False, max_hot_scatters=2)
 
     def init_bank_state(self, p, a, n, q_cap):
         return dict(

@@ -10,14 +10,21 @@ import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
                                        OUT_DONE, OUT_EVICT, OUT_FAIL,
-                                       OUT_GRANT, OUT_NONE, RESP, FusedOut,
-                                       Protocol)
+                                       OUT_GRANT, OUT_NONE, RESP, Contract,
+                                       FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
 @register
 class Lrsc(Protocol):
     name = "lrsc"
+    # every LR is answered (a taken slot only dooms the SC), so grants
+    # are NOT exclusive and the doomed-SC retry loop is expected; the
+    # watchdog's unconditional slot expiry is safe for live owners
+    # (their SC fails and retries — that IS the lrsc recovery path)
+    contract = Contract(exclusive_grant=False, retry_free=False,
+                        wait_class=False, evict_live_safe=True,
+                        max_hot_scatters=2)
 
     def init_bank_state(self, p, a, n, q_cap):
         return dict(

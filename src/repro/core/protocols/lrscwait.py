@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.core.protocols.base import (NXT_BACKOFF, NXT_MOD, NXT_WORK_DONE,
                                        OUT_DONE, OUT_FAIL, OUT_GRANT,
                                        OUT_NONE, OUT_SLEEP, RESP, SLEEP,
-                                       FifoQueueRecovery, FusedOut, Protocol)
+                                       Contract, FifoQueueRecovery, FusedOut,
+                                       Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -24,6 +25,14 @@ class LrscWait(FifoQueueRecovery, Protocol):
     # hands the reservation to the next waiter (repro.faults)
     name = "lrscwait"
     uses_queue = True
+    # wait-class: contenders sleep in the bank queue.  OUT_FAIL exists
+    # but ONLY at a full queue (the finite-q capacity collapse of
+    # Fig. 3) — the model checker verifies every FAIL against its own
+    # waiter count.  Grantees enqueue too, so queue_depth counts the
+    # holder.
+    contract = Contract(exclusive_grant=True, wait_class=True,
+                        fail_requires_full=True, queue_counts_holder=True,
+                        max_hot_scatters=4)
     #: colibri: SuccessorUpdate on enqueue-behind + WakeUpRequest round trip
     successor_updates = False
 

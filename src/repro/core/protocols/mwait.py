@@ -11,8 +11,8 @@ import jax.numpy as jnp
 
 from repro.core.protocols.base import (NXT_MOD, NXT_WORK_DONE, OUT_DONE,
                                        OUT_GRANT, OUT_NONE, OUT_SLEEP, RESP,
-                                       SLEEP, FifoQueueRecovery, FusedOut,
-                                       Protocol)
+                                       SLEEP, Contract, FifoQueueRecovery,
+                                       FusedOut, Protocol)
 from repro.core.protocols.registry import register
 
 
@@ -23,6 +23,12 @@ class MwaitLock(FifoQueueRecovery, Protocol):
     name = "mwait_lock"
     uses_queue = True
     fixed_backoff = True
+    # MCS-style queue sized one slot per core: contenders always park,
+    # never poll — fully retry-free; the holder stays at the queue head
+    # until its release pops it
+    contract = Contract(exclusive_grant=True, wait_class=True,
+                        retry_free=True, queue_counts_holder=True,
+                        max_hot_scatters=4)
 
     def wake_delay(self, p):
         # successor wake: one response latency + Qnode bounce (the same

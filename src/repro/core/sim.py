@@ -115,6 +115,23 @@ DYN_FIELDS = ("seed", "n_addrs", "lat", "work", "modify", "backoff",
 #: int32 sentinel for "no request" in the arbitration primitives
 _BIG = jnp.iinfo(jnp.int32).max
 
+
+def fused_key_fits_int32(cycles: int, n: int) -> bool:
+    """Static predicate behind the arbitration-path choice: may the
+    engine use the one-segment-min fused FIFO key
+    ``arr_cyc * (n + 1) + rot`` for this (horizon, core count)?
+
+    True iff the largest possible key provably stays below the int32
+    ``_BIG`` sentinel (``arr_cyc < cycles``, ``rot <= n``).  The seed
+    engine assumed this always held — false at ``n_cores=1024`` past
+    ~2M cycles, where the product wrapped int32 and inverted the FIFO
+    order (the PR 3 bug).  ``repro.analysis.int_range`` independently
+    re-derives the wrap threshold by interval arithmetic and certifies
+    this predicate sound and tight, so the two must never drift: the
+    engine imports THIS function, the analyzer checks it.
+    """
+    return cycles * (n + 1) + n <= int(_BIG)
+
 #: element ceiling for the dense (a, n) arbitration/histogram path: with
 #: a small bank×core product a masked 2-D min/sum vectorizes, while an
 #: n-lane scatter serializes lane by lane on CPU (~10× the cost of a
@@ -455,7 +472,7 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     # (arr_cyc < cycles, rot <= n).  The seed engine assumed it never
     # did — false at n=1024 past ~2M cycles — so the safe two-stage
     # arbiter kicks in exactly where the old key wrapped.
-    key_fits_int32 = p.cycles * (n + 1) + n <= _BIG
+    key_fits_int32 = fused_key_fits_int32(p.cycles, n)
     # execution backend: the fused Pallas engine-step kernel replaces
     # the arbitration + protocol + histogram stages of the scan body;
     # everything around it (issue, retire, network, wakeups) is shared

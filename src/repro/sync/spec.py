@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, Mapping
 
 from repro.core.sim import SimParams
 from repro.faults import FaultPlan
@@ -102,6 +102,35 @@ class Costs:
     #                           traffic (Result.timeseries()); 0 = off,
     #                           bit-identical to the untelemetered engine
 
+
+#: Certified field envelope for the static analyses
+#: (``repro.analysis``): inclusive (lo, hi) bounds per Spec field,
+#: consumed by the integer-range pass to prove the engine's arbitration
+#: and backoff arithmetic int32-safe over every Spec inside the
+#: envelope (lower bounds mirror ``SimParams._BOUNDS``; upper bounds
+#: are the certification scale — n_cores covers 4x the demonstrated
+#: 4096-core runs).  A Spec outside the envelope still RUNS (the
+#: engine's own static fallbacks apply); it is just not covered by the
+#: certificate, and ``python -m repro.analysis range`` reports the
+#: exact thresholds where each fallback must engage.
+ANALYSIS_BOUNDS: Dict[str, tuple] = {
+    "n_cores": (1, 16_384),
+    "cycles": (1, 2**31 - 1),
+    "n_addrs": (1, 16_384),
+    "lat": (0, 2**16),
+    "work": (0, 2**16),
+    "modify": (0, 2**16),
+    "backoff": (0, 2**20),
+    "backoff_exp": (1, 8),
+    "q_slots": (1, 16_384),
+    "net_bw": (1, 2**20),
+    "hol_block": (0, 2**20),
+    "n_workers": (0, 16_384),
+    "n_groups": (1, 16_384),
+    "zipf_skew": (0, 10_000),
+    "telemetry_windows": (0, 2**16),
+    "unroll": (1, 64),
+}
 
 #: (spec attribute, group class) in declaration order.  ``faults`` is
 #: special in ONE way: it lowers onto a single ``SimParams.faults``

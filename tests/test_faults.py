@@ -4,12 +4,12 @@ invariants of every protocol's recovery path, and the sweep runner's
 poisoned-chunk isolation."""
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 import repro.core.sweep as sweep_mod
+from repro.analysis import trace_safety
 from repro.core.protocols.registry import names as proto_names
 from repro.core.sim import SimParams, simulate
 from repro.faults import FaultPlan
@@ -65,10 +65,9 @@ def test_schedule_determinism():
 # ------------------------------------------------- static elision
 
 def _num_carry(p):
-    jpr = jax.make_jaxpr(lambda: simulate(p))()
-    scans = [e for e in jpr.jaxpr.eqns if e.primitive.name == "scan"]
-    assert len(scans) == 1
-    return scans[0].params["num_carry"]
+    # single implementation in the static-analysis subsystem (raises if
+    # the engine no longer lowers to ONE lax.scan)
+    return trace_safety.scan_carry_count(p)
 
 
 def test_faults_off_statically_elided():

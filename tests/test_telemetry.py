@@ -20,13 +20,13 @@ The contract under test, in cost order:
 """
 import json
 
-import jax
 import numpy as np
 import pytest
 
+from repro.analysis import trace_safety
 from repro.core import protocols, sweep, workloads
 from repro.core.protocols.base import BACKOFF, SLEEP
-from repro.core.sim import SimParams, _run, simulate
+from repro.core.sim import SimParams, _run
 from repro.obs import EventLog, Timeseries, schema
 from repro.sync import Result, Spec, Study, run, scenario
 
@@ -45,12 +45,11 @@ def _assert_runs_equal(r0, r1):
 # ---------------------------------------------------------------------------
 
 def _num_carry(**kw):
-    p = SimParams(protocol="colibri", n_cores=16, cycles=400, n_addrs=4,
-                  **kw)
-    jpr = jax.make_jaxpr(lambda: simulate(p))()
-    scans = [e for e in jpr.jaxpr.eqns if e.primitive.name == "scan"]
-    assert len(scans) == 1, "engine must lower to a single lax.scan"
-    return scans[0].params["num_carry"]
+    # single implementation in the static-analysis subsystem (raises if
+    # the engine no longer lowers to ONE lax.scan)
+    return trace_safety.scan_carry_count(
+        SimParams(protocol="colibri", n_cores=16, cycles=400, n_addrs=4,
+                  **kw))
 
 
 def test_off_path_carry_statically_elided():
