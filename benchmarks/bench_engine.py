@@ -122,6 +122,18 @@ def rows() -> List[Dict]:
                 "backend": f"xla_cpu_vs_{pb}", "wall_s": dt_x,
                 "wall_s_xla": dt_x, "wall_s_pallas": dt_p,
                 "pallas_over_xla": dt_p / dt_x})
+    # hierarchical-topology overhead: the same engine run with the
+    # cluster2 network stage on (per-level link caps + hop billing) —
+    # the flat row above is the in-benchmark baseline for the cost of
+    # the topology tables
+    n_topo = min(256, max(ENGINE_CORES))
+    s = Spec(protocol="colibri", n_cores=n_topo, cycles=ENGINE_CYCLES,
+             topology="cluster2", clusters=4)
+    dt = _time(lambda: run(s))
+    out.append({"figure": "engine", "row": f"engine_cluster2_{n_topo}c",
+                "n_cores": n_topo, "cycles": ENGINE_CYCLES, "backend": bk,
+                "topology": "cluster2", "wall_s": dt,
+                "core_cycles_per_s": n_topo * ENGINE_CYCLES / dt})
     study = _grid_study()
     dt = _time(lambda: study.run(), reps=1)
     out.append({"figure": "engine", "row": "grid256", "n_points": len(study),
@@ -171,6 +183,12 @@ def headline(rs: List[Dict]) -> Dict[str, float]:
     pair = by.get("backend_pair_256c")
     if pair:
         head["backend_pair_pallas_over_xla"] = pair["pallas_over_xla"]
+    ntopo = min(256, max(ENGINE_CORES))
+    topo = by.get(f"engine_cluster2_{ntopo}c")
+    flat = by.get(f"engine_{ntopo}c")
+    if topo and flat:
+        head["cluster2_overhead_vs_flat"] = (
+            topo["wall_s"] / flat["wall_s"] - 1.0)
     grid = by["grid256"]
     head["grid256_points_per_s"] = grid["points_per_s"]
     if "engine_1024c" in by:                    # full (non-QUICK) pass

@@ -1,0 +1,113 @@
+"""Topology benchmark — hierarchical NoC vs the flat crossbar.
+
+The paper's Colibri is explicitly hierarchical (per-cluster reservation
+stations, cross-cluster handoffs), but every Fig. 4/5/6 row so far ran
+on the engine's flat crossbar.  This benchmark reruns the contended-
+histogram shape on the ``core.topologies`` cluster trees and asks the
+question the hierarchy exists to answer: **does cluster-aware waiting
+keep its win once remote banks cost real hops and cross-cluster links
+have finite capacity?**
+
+Rows, per core count:
+
+* the protocol × topology matrix — ``colibri`` / ``lrsc`` on ``flat``
+  and ``cluster2``, plus the cluster-aware waiters (``colibri_hier``,
+  ``hw_event``) and the FEB primitive (``nb_feb``) on ``cluster2`` —
+  each row carrying the metric triple plus the per-op NoC hop count the
+  energy model bills at ``e_hop``;
+* a ``colibri_hier`` topology ladder (``flat`` → ``cluster2`` →
+  ``cluster3``) showing the hierarchy cost curve.
+
+Headline (at the largest measured core count): ``colibri_hier`` on
+``cluster2`` vs flat ``colibri`` (the hierarchy tax on the paper's
+protocol), vs ``lrsc`` *on the same cluster2 NoC* (retry storms pay the
+cross-cluster latency on every poll — the polling-free win grows with
+hop cost), and the hop-energy share of the per-op budget.
+
+``REPRO_BENCH_QUICK=1`` trims to 64 cores and a short horizon — the CI
+smoke row ``check_trend.py`` gates on.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks._common import pick
+from repro.sync import Spec, Study
+
+CORES = pick((256, 1024), (64,))
+CYCLES = pick(12_000, 1_500)
+CLUSTERS = 4
+N_ADDRS = 4
+
+#: the protocol × topology matrix (Fig. 4-style contended histogram)
+MATRIX = (("colibri", "flat"), ("lrsc", "flat"),
+          ("colibri", "cluster2"), ("lrsc", "cluster2"),
+          ("colibri_hier", "cluster2"), ("hw_event", "cluster2"),
+          ("nb_feb", "cluster2"))
+
+#: the hierarchy cost curve for the cluster-aware waiter
+LADDER = pick(("flat", "cluster2", "cluster3"), ("flat", "cluster2"))
+
+
+def _row(r, **extra) -> Dict:
+    ops = float(np.asarray(r.stats["ops"]).sum())
+    hops = float(np.asarray(r.stats.get("hops", 0)))
+    return r.to_row(figure="topology",
+                    clusters=r.spec.topology.clusters,
+                    hops_per_op=hops / max(ops, 1.0), **extra)
+
+
+def rows(cycles: int = CYCLES) -> List[Dict]:
+    specs = [Spec(protocol=proto, topology=topo, clusters=CLUSTERS,
+                  n_cores=n, n_addrs=N_ADDRS, cycles=cycles)
+             for n in CORES for proto, topo in MATRIX]
+    out = [_row(r, row=f"{r.spec.protocol.name}_"
+                       f"{r.spec.topology.name}_{r.spec.topology.n_cores}c")
+           for r in Study.from_specs(specs).run()]
+    ladder = [Spec(protocol="colibri_hier", topology=topo,
+                   clusters=CLUSTERS, n_cores=CORES[0], n_addrs=N_ADDRS,
+                   cycles=cycles)
+              for topo in LADDER]
+    out += [_row(r, row=f"ladder_{r.spec.topology.name}")
+            for r in Study.from_specs(ladder).run()]
+    return out
+
+
+def headline(rs: List[Dict]) -> Dict[str, float]:
+    n = max(CORES)
+    t = {r["row"]: r["throughput"] for r in rs}
+    e = {r["row"]: r["energy_pj_per_op"] for r in rs}
+    h = {r["row"]: r["hops_per_op"] for r in rs}
+
+    def key(proto, topo):
+        return f"{proto}_{topo}_{n}c"
+
+    hier_c2 = t[key("colibri_hier", "cluster2")]
+    return {
+        # the hierarchy tax: cluster-aware colibri on a 2-level NoC vs
+        # the paper's flat-crossbar colibri
+        "hier_cluster2_over_flat_colibri":
+            hier_c2 / t[key("colibri", "flat")],
+        # the polling-free win ON the hierarchical NoC: every lrsc poll
+        # pays cross-cluster hops, every colibri_hier wait sleeps local
+        "hier_over_lrsc_cluster2": hier_c2 / t[key("lrsc", "cluster2")],
+        "colibri_over_lrsc_cluster2":
+            t[key("colibri", "cluster2")] / t[key("lrsc", "cluster2")],
+        "hw_event_over_lrsc_cluster2":
+            t[key("hw_event", "cluster2")] / t[key("lrsc", "cluster2")],
+        "nb_feb_over_lrsc_cluster2":
+            t[key("nb_feb", "cluster2")] / t[key("lrsc", "cluster2")],
+        # hop traffic: the retry storm crosses clusters far more often
+        # per completed op than the sleep-based waiters
+        "lrsc_hops_per_op_cluster2": h[key("lrsc", "cluster2")],
+        "hier_hops_per_op_cluster2": h[key("colibri_hier", "cluster2")],
+        "lrsc_energy_over_hier_cluster2":
+            e[key("lrsc", "cluster2")] / max(e[key("colibri_hier",
+                                                   "cluster2")], 1e-12),
+        # the ladder: deeper hierarchies cost monotone throughput
+        "ladder_monotone": float(all(
+            t[f"ladder_{a}"] >= t[f"ladder_{b}"] * 0.99
+            for a, b in zip(LADDER, LADDER[1:]))),
+    }

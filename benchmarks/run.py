@@ -62,7 +62,7 @@ def main(argv=None) -> None:
                             bench_faults, bench_histogram,
                             bench_interference, bench_locks, bench_queue,
                             bench_scatter_kernel, bench_sweep,
-                            bench_workloads, fig_summary)
+                            bench_topology, bench_workloads, fig_summary)
     benches = {
         "summary": fig_summary,
         "fig3_histogram": bench_histogram,
@@ -76,6 +76,7 @@ def main(argv=None) -> None:
         "workloads_grid": bench_workloads,
         "engine": bench_engine,
         "faults": bench_faults,
+        "topology": bench_topology,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", metavar="NAME", default=None,

@@ -91,19 +91,26 @@ class Config:
     ops: int = 2
     q_slots: int = 64
     n_groups: int = 2
+    topology: str = "flat"
+    clusters: int = 2
 
     @property
     def wa(self) -> Tuple[int, ...]:
         return tuple(c % self.a for c in range(self.n))
 
     def label(self) -> str:
-        return (f"n={self.n} a={self.a} ops={self.ops} q={self.q_slots}"
-                f" g={self.n_groups}")
+        lbl = (f"n={self.n} a={self.a} ops={self.ops} q={self.q_slots}"
+               f" g={self.n_groups}")
+        if self.topology != "flat":
+            lbl += f" topo={self.topology}/{self.clusters}"
+        return lbl
 
 
 class _P:
     """Static parameter namespace handed to the hooks (the model has no
-    clock, so the latency knobs only have to be positive)."""
+    clock, so the latency knobs only have to be positive; topology-aware
+    protocols like ``hw_event`` size their cluster queues from
+    ``topology``/``clusters``)."""
 
     def __init__(self, cfg: Config):
         self.lat = 1
@@ -111,22 +118,43 @@ class _P:
         self.modify = 1
         self.q_slots = cfg.q_slots
         self.n_groups = cfg.n_groups
+        self.topology = cfg.topology
+        self.clusters = cfg.clusters
 
 
 def configs_for(name: str, quick: bool = False) -> List[Config]:
     """Small-scope grid per protocol.  ``lrscwait`` adds a q=1 config
     (the finite-queue FAIL path); ``colibri_hier`` adds a 4-core
     2-bank 2-group config (cross-bank queue aliasing is invisible with
-    a single bank — the PR 6 lesson)."""
+    a single bank — the PR 6 lesson).  ``hw_event`` runs 2-cluster
+    ``cluster2`` configs where every bank is shared across clusters, so
+    a cross-cluster wakeup delivered to the wrong cluster queue (or a
+    per-cluster queue aliased across banks) reaches a checked state;
+    ``nb_feb`` adds the same 2-cluster shape to certify the FEB
+    invariant is topology-independent."""
     if name == "colibri_hier":
         cfgs = [Config(n=3, a=1, ops=2, n_groups=2),
                 Config(n=4, a=2, ops=1, n_groups=2)]
+        return cfgs[:1] if quick else cfgs
+    if name == "hw_event":
+        # block placement puts cores {0,1} / {2,3} in clusters 0 / 1;
+        # with wa = c % a every bank then serves both clusters, so the
+        # cross-cluster handoff and the intra-cluster wakeup broadcast
+        # both fire, and the a=2 config additionally interleaves two
+        # banks' per-cluster queues (the aliasing scope)
+        cfgs = [Config(n=3, a=1, ops=2, n_groups=2),
+                Config(n=4, a=1, ops=1, topology="cluster2", clusters=2),
+                Config(n=4, a=2, ops=1, topology="cluster2", clusters=2)]
         return cfgs[:1] if quick else cfgs
     base = [Config(n=2, a=1, ops=2), Config(n=3, a=1, ops=2),
             Config(n=3, a=2, ops=1)]
     if name == "lrscwait":
         base.insert(1, Config(n=2, a=1, ops=2, q_slots=1))
         return [base[0], base[1]] if quick else base
+    if name == "nb_feb":
+        base.append(Config(n=4, a=2, ops=1, topology="cluster2",
+                           clusters=2))
+        return base[:1] if quick else base
     return base[:1] if quick else base
 
 

@@ -14,7 +14,8 @@ the single implementation those tests (and the CI gate) call:
 * ``expected_scan_carries(p)`` — the budgeted count: the frozen
   27-entry engine carry contract (:data:`ENGINE_CARRY_KEYS`) + the
   protocol's bank/core state leaves + the feature deltas (+1 telemetry,
-  +3 faults, +2 holder-kill mode, +3 watchdog);
+  +3 faults, +2 holder-kill mode, +3 watchdog, +1 hierarchical
+  topology);
 * ``scatter_count(p)`` — scatter-family ops inside the scan body,
   checked against each protocol's ``contract.max_hot_scatters`` budget
   (a regression reintroducing n-lane scatters into the hot path fails
@@ -37,6 +38,7 @@ from repro.analysis.report import Finding, PassReport
 from repro.core import sim
 from repro.core import sweep
 from repro.core.protocols import registry as proto_registry
+from repro.core.topologies import registry as topo_registry
 from repro.faults import FaultPlan
 
 #: The engine's fixed carry contract: the top-level keys of the scan
@@ -55,6 +57,7 @@ TELEMETRY_CARRIES = 1            # tele accumulator
 FAULTS_CARRIES = 3               # faults_injected, halt_cyc, last_ret
 HOLDER_KILL_CARRIES = 2          # kmask, kleft
 WATCHDOG_CARRIES = 3             # wd_srv, wd_own, recoveries
+TOPO_CARRIES = 1                 # hops counter (hierarchical topologies)
 
 #: ys stacked per cycle when record_trace is on (step/wait/state/qlen)
 TRACE_YS = 4
@@ -64,7 +67,8 @@ TRACE_YS = 4
 #: sweep axes — ``core.sweep`` re-traces per combination of these.
 CARRY_AFFECTING_FIELDS: Tuple[str, ...] = (
     "protocol", "workload", "n_cores", "cycles", "q_slots", "n_groups",
-    "record_trace", "unroll", "backend", "telemetry_windows", "faults")
+    "record_trace", "unroll", "backend", "telemetry_windows", "faults",
+    "topology", "clusters")
 
 
 # ---- jaxpr plumbing -----------------------------------------------------
@@ -123,6 +127,8 @@ def expected_scan_carries(p: sim.SimParams) -> int:
            + len(jax.tree_util.tree_leaves(xc)))
     if p.telemetry_windows > 0:
         cnt += TELEMETRY_CARRIES
+    if topo_registry.get(p.topology).levels:     # hierarchical: hops carry
+        cnt += TOPO_CARRIES
     fp = p.faults
     if fp.enabled:
         cnt += FAULTS_CARRIES
@@ -171,6 +177,8 @@ def _variants(name: str) -> List[Tuple[str, sim.SimParams]]:
         ("kill+wd", reference_params(
             name, faults=FaultPlan(n_kill=1, kill_cyc=100,
                                    watchdog_cyc=200))),
+        ("cluster2", reference_params(name, topology="cluster2",
+                                      clusters=2)),
     ]
 
 

@@ -100,6 +100,16 @@ def system_overhead(design: str, n_cores: int, n_banks: int,
 # Energy model
 # ---------------------------------------------------------------------------
 
+#: pJ per NoC hop traversal (router + link segment) under a hierarchical
+#: topology.  Table II has no hop-resolved rows (the paper's tile is a
+#: flat crossbar), so this is a structural constant from the hierarchical
+#: -cluster NoC literature (arXiv:2307.10248-class meshes, ~1 pJ/hop at
+#: the reference node), NOT a fitted coefficient: ``fit_energy`` never
+#: adjusts it, and flat-topology results (which carry no ``hops`` stat)
+#: are billed exactly as before.
+E_HOP_PJ = 1.2
+
+
 @dataclasses.dataclass(frozen=True)
 class EnergyFit:
     e_msg: float          # pJ per network message
@@ -108,6 +118,7 @@ class EnergyFit:
     e_backoff: float      # pJ per backoff-loop cycle (busy wait)
     e_sleep: float        # pJ per clock-gated wait cycle (sleep/barrier)
     residuals: Dict[str, float]
+    e_hop: float = E_HOP_PJ   # pJ per NoC hop traversal (structural)
 
 
 #: stat totals every energy evaluation needs — validated up front so a
@@ -165,13 +176,19 @@ def fit_energy(stats: Dict[str, Dict[str, float]]) -> EnergyFit:
 def energy_per_op(stats: Dict[str, float], fit: EnergyFit) -> float:
     """pJ per completed op for one simulation's stat totals (same
     required keys as :func:`fit_energy`; barrier waits billed at the
-    clock-gated ``e_sleep`` rate)."""
+    clock-gated ``e_sleep`` rate).  Hierarchical-topology runs carry a
+    ``hops`` total (NoC hop traversals, ``core.topologies``) billed at
+    ``e_hop`` each; flat runs carry no such key and are billed exactly
+    as before."""
     _require_energy_keys(stats, "energy_per_op")
     ops = max(stats["ops"], 1.0)
-    return (fit.e_msg * stats["msgs"] + fit.e_bank * stats["bank_ops"]
-            + fit.e_active * (stats["active_cyc"] - stats["backoff_cyc"])
-            + fit.e_backoff * stats["backoff_cyc"]
-            + fit.e_sleep * (stats["sleep_cyc"] + stats["bar_cyc"])) / ops
+    total = (fit.e_msg * stats["msgs"] + fit.e_bank * stats["bank_ops"]
+             + fit.e_active * (stats["active_cyc"] - stats["backoff_cyc"])
+             + fit.e_backoff * stats["backoff_cyc"]
+             + fit.e_sleep * (stats["sleep_cyc"] + stats["bar_cyc"]))
+    if "hops" in stats:
+        total += fit.e_hop * stats["hops"]
+    return total / ops
 
 
 #: Per-event energies fit to Table II at the canonical calibration point

@@ -186,6 +186,10 @@ def energy_stats(res: Dict[str, np.ndarray]) -> Dict[str, float]:
     :func:`costmodel.energy_per_op` validate."""
     s = {k: float(np.asarray(res[k])) for k in ENERGY_STAT_KEYS}
     s["ops"] = float(np.asarray(res["ops"]).sum())
+    # hierarchical-topology runs carry NoC hop traversals; flat runs
+    # don't have the key and the energy model bills them as before
+    if "hops" in res:
+        s["hops"] = float(np.asarray(res["hops"]))
     return s
 
 

@@ -12,6 +12,9 @@ Importing this package registers every built-in protocol:
 ``lrsc_lock``  spin lock from an LR/SC pair (two round trips/attempt)
 ``ticket_lock``  FIFO spin lock (ticket dispenser; polling but fair)
 ``mwait_lock`` MCS queue lock, waiters sleep via Mwait (polling-free)
+``hw_event``   per-cluster hardware event unit: clock-gated wait,
+               1-cycle intra-cluster wakeup, tree combine across levels
+``nb_feb``     full/empty-bit atomics (retry-free universal primitive)
 =============  ==========================================================
 
 New protocols: subclass :class:`~repro.core.protocols.base.Protocol`,
@@ -19,11 +22,11 @@ decorate with :func:`~repro.core.protocols.registry.register`, and import
 the module here.  The engine (``core.sim``), the vmapped sweep runner
 (``core.sweep``), and the benchmarks resolve plugins by name.
 """
-from repro.core.protocols import (amo, colibri, colibri_hier, locks, lrsc,
-                                  lrscwait, mwait)
+from repro.core.protocols import (amo, colibri, colibri_hier, hw_event,
+                                  locks, lrsc, lrscwait, mwait, nb_feb)
 from repro.core.protocols.base import Ctx, Protocol
 from repro.core.protocols.registry import get, names, register
 
 __all__ = ["Ctx", "Protocol", "get", "names", "register",
-           "amo", "colibri", "colibri_hier", "locks", "lrsc", "lrscwait",
-           "mwait"]
+           "amo", "colibri", "colibri_hier", "hw_event", "locks", "lrsc",
+           "lrscwait", "mwait", "nb_feb"]

@@ -52,6 +52,7 @@ from jax import lax
 
 from repro.core import metrics as metrics_mod
 from repro.core import protocols as proto_registry
+from repro.core import topologies as topo_registry
 from repro.core import workloads as wl_registry
 from repro.core.metrics import LAT_BINS, LAT_SUB
 from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, NXT_BACKOFF,
@@ -186,6 +187,15 @@ class SimParams:
     seed: int = 0
     n_groups: int = 4                # colibri_hier: clusters of cores
     zipf_skew: int = 100             # 100*s for ADDR_ZIPF streams (s=1.0)
+    # NoC topology (core.topologies): "flat" is the historical single
+    # crossbar and compiles to NO topology tables at all — the trace is
+    # bit-identical to the pre-topology engine (tests/test_topology.py
+    # pins the full protocol × workload grid).  Hierarchical entries
+    # ("cluster2", "cluster3") close per-(core,bank) hop/latency tables
+    # and per-level link budgets over the scan as constants: the carry
+    # contract gains only the single ``hops`` counter.
+    topology: str = "flat"
+    clusters: int = 4                # leaf clusters (hierarchical topologies)
     record_trace: bool = False       # emit (cycles, n) completed-step trace
     # Windowed in-scan telemetry (repro.obs): > 0 carries a
     # (telemetry_windows, TELE_K) accumulator through the scan — a
@@ -216,7 +226,7 @@ class SimParams:
                ("backoff_exp", 1), ("net_bw", 1), ("lat", 0),
                ("work", 0), ("modify", 0), ("backoff", 0),
                ("hol_block", 0), ("n_workers", 0), ("zipf_skew", 0),
-               ("telemetry_windows", 0))
+               ("telemetry_windows", 0), ("clusters", 1))
 
     def __post_init__(self):
         if self.protocol not in proto_registry.names():
@@ -227,6 +237,10 @@ class SimParams:
             raise ValueError(
                 f"unknown workload {self.workload!r}; registered workloads: "
                 f"{', '.join(wl_registry.names())}")
+        if self.topology not in topo_registry.names():
+            raise ValueError(
+                f"unknown topology {self.topology!r}; registered topologies: "
+                f"{', '.join(topo_registry.names())}")
         for fname, lo in self._BOUNDS:
             v = getattr(self, fname)
             if (not isinstance(v, (int, np.integer))
@@ -364,6 +378,15 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     rp = _resolve(p, dyn)
     q_cap = proto.q_cap(p, n)
     exp_cap = 1 if proto.fixed_backoff else rp.backoff_exp
+    # ---- NoC topology (core.topologies) --------------------------------
+    # Placement/hop/latency tables are compiled host-side ONCE per trace
+    # and closed over as constants — same carry-cliff discipline as
+    # telemetry/faults: ``flat`` compiles to is_flat and every topology
+    # branch below is Python-gated off, tracing to exactly the
+    # pre-topology jaxpr (tests/test_topology.py pins bit-identity).
+    topo = topo_registry.get(p.topology)
+    tt = topo.tables(p, n, a)
+    use_topo = not tt.is_flat
 
     state = dict(
         st=jnp.full((n,), WORK, jnp.int32),
@@ -398,6 +421,12 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         w_tmr=jnp.zeros((n,), jnp.int32),
         w_served=jnp.zeros((n,), jnp.int32),
     )
+    # hierarchical topologies carry ONE extra scalar: total NoC hop
+    # traversals (requests + responses), the quantity the per-hop energy
+    # term bills.  Flat runs never carry it (and their result dicts
+    # never contain "hops"), keeping the 27-key contract untouched.
+    if use_topo:
+        state["hops"] = jnp.zeros((), jnp.int32)
     # windowed telemetry (repro.obs): the carry exists ONLY when the
     # knob is on — a Python-level gate, so the off path traces to
     # exactly the pre-telemetry scan (the PR 4 lesson: one extra
@@ -452,6 +481,14 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
     # table.  The scan body only gathers from them at ``pc``.
     iota = jnp.arange(n, dtype=jnp.int32)
     ba = jnp.arange(a, dtype=jnp.int32)
+    if use_topo:
+        # flattened (n*a,) tables: the scan body gathers one lane per
+        # core at ``iota * a + addr`` (addr is finalized before every
+        # consumer) — two O(n) gathers per cycle, no scatters
+        extra_t = jnp.asarray(tt.extra.reshape(-1), jnp.int32)
+        hops_t = jnp.asarray(tt.hops.reshape(-1), jnp.int32)
+        cross_t = tuple(jnp.asarray(x.reshape(-1)) for x in tt.cross)
+        lvl_div = tuple(lv.bw_div for lv in topo.levels)
     is_worker = iota < rp.n_workers              # first W cores are workers
     # static: worker machinery folds away when no config has workers
     # (run() always sees a Python int; sweep drops the axis when the
@@ -546,7 +583,16 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         phase = jnp.where(md, P_REL,
                           jnp.where(start | rb, P_ACQ, s["phase"]))
         st = jnp.where(issue, REQ, st)
-        tmr = jnp.where(issue, rp.lat, tmr)
+        if use_topo:
+            # cross-cluster requests pay the per-level extra latency once
+            # per issue (acquire, reissue, release) — the round-trip cost
+            # of the level routers on top of the flat ``lat`` baseline.
+            # Billed HERE, before the request reaches the network/bank
+            # stages, so protocols and the Pallas kernel never see
+            # topology: backends stay bit-identical by construction.
+            tmr = jnp.where(issue, rp.lat + extra_t[iota * a + addr], tmr)
+        else:
+            tmr = jnp.where(issue, rp.lat, tmr)
 
         # ---- RESP arrives: the current micro-op retires ----
         ra = t0 & (st == RESP)
@@ -635,6 +681,21 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                             0)
         budget = jnp.maximum(rp.net_bw - s["resp_prev"] - hol, 1)
         accepted = accept_rotating_fair(all_req, rot, budget, shift=shift)
+        if use_topo:
+            # per-level link capacity: a request whose (core, bank) path
+            # crosses level ℓ must ALSO win one of that level's
+            # ``net_bw // bw_div`` link slots this cycle (same rotating-
+            # fair arbiter, same rotation — fairness is preserved level
+            # by level).  Rejected requesters stay fresh and retry next
+            # cycle; they count into net_stall like any denied request.
+            # Worker streams stay cluster-local (their banks are the
+            # local SPM ports), so only atomic requests contend here.
+            xmask = [lx[iota * a + addr] & ~is_worker for lx in cross_t]
+            for cm, div in zip(xmask, lvl_div):
+                acc_x = accept_rotating_fair(
+                    all_req & cm, rot, jnp.maximum(rp.net_bw // div, 1),
+                    shift=shift)
+                accepted = accepted & (~cm | acc_x)
         # Bernoulli NoC drop on newly-accepted requests: the message
         # dies in flight, the core stays in REQ and retransmits next
         # cycle; the wasted link hop is billed into msgs below
@@ -656,6 +717,15 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         net_stall = s["net_stall"] + stall_now
         parked = s["parked"] | (fresh & accepted)
         arr_cyc = jnp.where(fresh & accepted, cyc, s["arr_cyc"])
+        if use_topo:
+            # hop accounting for the energy model: every accepted
+            # request traverses its (core, bank) hop path twice (request
+            # + response); accepted worker loads are cluster-local
+            # single-hop round trips.
+            hops_cnt = (s["hops"]
+                        + 2 * jnp.where(fresh & accepted,
+                                        hops_t[iota * a + addr], 0).sum()
+                        + 2 * w_acc.sum())
 
         # ---- bank arbitration: FIFO by arrival stamp among parked ----
         arrived = parked & (st == REQ)
@@ -950,6 +1020,8 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
                    backoff_cyc=backoff_cyc,
                    bank_ops=bank_ops, net_stall=net_stall,
                    w_tmr=w_tmr, w_served=w_served)
+        if use_topo:
+            out["hops"] = hops_cnt
         if use_faults:
             out["faults_injected"] = finj
             out["last_ret"] = last_ret
@@ -967,10 +1039,20 @@ def simulate(p: SimParams, dyn: Optional[Dict] = None, batch: int = 1
         if use_tele:
             wakes = (((st_pre_wake == SLEEP) & (st != SLEEP)).sum()
                      if proto.uses_queue else jnp.zeros((), jnp.int32))
+            # NoC link locality: accepted requests split by whether the
+            # (core, bank) path crosses the leaf-cluster boundary.  On
+            # the flat topology the split is the Python constant
+            # "everything local" — no extra work traced.
+            if use_topo:
+                xcl_now = (accepted & xmask[0]).sum().astype(jnp.int32)
+            else:
+                xcl_now = jnp.zeros((), jnp.int32)
+            loc_now = accepted.sum().astype(jnp.int32) - xcl_now
             row = jnp.stack([active_now, sleep_now, backoff_now, bar_now,
                              oc["grants"], oc["retires"], oc["fails"],
                              oc["enqueues"], wakes, cs["msgs"] - s["msgs"],
-                             stall_now, qd.sum()]).astype(jnp.int32)
+                             stall_now, loc_now, xcl_now,
+                             qd.sum()]).astype(jnp.int32)
             w = cyc // tele_cw
             tele = s["tele"].at[w, :TELE_NSUM].add(row)
             out["tele"] = tele.at[w, TELE_NSUM].max(qd.max())

@@ -74,7 +74,7 @@ from repro.core.sim import (DYN_FIELDS, _DENSE_BANK_ELTS, SimParams,
 #: factor are baked into the scan body, so all are part of the fingerprint
 STATIC_FIELDS = ("protocol", "workload", "n_cores", "cycles", "q_slots",
                  "n_groups", "record_trace", "unroll", "backend",
-                 "telemetry_windows", "faults")
+                 "telemetry_windows", "faults", "topology", "clusters")
 
 #: default ceiling on points per compiled vmap invocation
 #: (``REPRO_SWEEP_MAX_BATCH`` overrides — read at each ``sweep()`` call,

@@ -1,0 +1,36 @@
+"""Hierarchical cluster topologies (arXiv:2307.10248 latency model).
+
+``cluster2``
+    Two-level machine: ``p.clusters`` leaf clusters of cores, banks
+    interleaved across the cluster-local SPMs.  A request leaving its
+    cluster pays +8 cycles round trip (the reference manycore's
+    measured remote-cluster access penalty over the local one-cycle
+    SPM port) and contends for a cross-cluster link budget of
+    ``net_bw // 4`` acceptances per cycle.
+
+``cluster3``
+    Three-level machine: leaf clusters pair into super-groups (the
+    ``leaf >> 1`` default tree), with a cheaper intra-group boundary
+    (+6 cycles, ``net_bw // 2``) and an expensive top-level crossing
+    (+12 cycles, ``net_bw // 8``) — the "group → top" split of the same
+    reference NoC.  A top-level crossing pays both boundaries
+    (hops = 5, extra = 18): messages traverse the group router on the
+    way to the top crossbar.
+"""
+from __future__ import annotations
+
+from repro.core.topologies.base import LinkLevel, Topology
+from repro.core.topologies.registry import register
+
+
+@register
+class Cluster2(Topology):
+    name = "cluster2"
+    levels = (LinkLevel("cluster", extra_lat=8, bw_div=4),)
+
+
+@register
+class Cluster3(Topology):
+    name = "cluster3"
+    levels = (LinkLevel("cluster", extra_lat=6, bw_div=2),
+              LinkLevel("group", extra_lat=12, bw_div=8))

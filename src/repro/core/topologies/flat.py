@@ -1,0 +1,19 @@
+"""``flat`` — the degenerate single-crossbar topology.
+
+No levels: every (core, bank) pair is one hop at the baseline ``lat``,
+and the only bandwidth limit is the global ``net_bw`` acceptance budget
+the engine has always enforced.  ``tables()`` therefore compiles to
+``is_flat=True`` and the engine Python-gates every topology branch off,
+tracing to exactly the pre-topology jaxpr — this is what keeps every
+existing golden bit-identical and the scan carry contract unchanged.
+"""
+from __future__ import annotations
+
+from repro.core.topologies.base import Topology
+from repro.core.topologies.registry import register
+
+
+@register
+class Flat(Topology):
+    name = "flat"
+    levels = ()

@@ -29,9 +29,11 @@ import numpy as np
 from repro.obs import schema
 from repro.obs.events import EventLog
 
-#: Perfetto process ids: cores and banks render as two process groups
+#: Perfetto process ids: cores, banks and the NoC render as three
+#: process groups
 _PID_CORES = 1
 _PID_BANKS = 2
+_PID_NOC = 3
 
 #: engine state code -> stable Perfetto slice color (color_name is a
 #: documented Chrome-trace extension; viewers without it just ignore it)
@@ -149,6 +151,25 @@ def to_trace_events(result: Any, include_work: bool = False,
                 ev.append({"ph": "C", "pid": _PID_BANKS, "tid": int(b),
                            "name": f"bank {b} qlen", "ts": int(cyc),
                            "args": {"depth": int(col[cyc])}})
+    # ---- NoC link-occupancy counters (windowed telemetry) ---------------
+    # accepted messages split into intra-cluster (local) vs cross-cluster
+    # traffic, one counter sample per telemetry window; only present when
+    # the run had telemetry_windows > 0, and the cross series is
+    # identically zero under the flat topology
+    stats = getattr(result, "stats", None)
+    if stats is not None and "tele" in stats:
+        from repro.obs.timeseries import Timeseries
+        t = Timeseries.from_result(result)
+        loc = t.counts("loc_msgs")
+        xcl = t.counts("xcl_msgs")
+        starts = t.window_start_cycle
+        ev.append({"ph": "M", "pid": _PID_NOC, "name": "process_name",
+                   "args": {"name": "noc"}})
+        for i in range(t.n_used):
+            ev.append({"ph": "C", "pid": _PID_NOC, "tid": 0,
+                       "name": "link msgs", "ts": int(starts[i]),
+                       "args": {"local": int(loc[i]),
+                                "cross_cluster": int(xcl[i])}})
     return ev
 
 

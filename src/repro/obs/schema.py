@@ -39,11 +39,17 @@ from repro.core.protocols.base import (BACKOFF, BARWAIT, MOD, REQ, RESP,
 #: ``OUT_GRANT``/``OUT_DONE``/``OUT_FAIL``/``OUT_SLEEP`` codes.
 #: ``wakes`` — cores moved out of SLEEP by a protocol wake-up this
 #: window.  ``msgs``/``net_stall`` — NoC messages and rejected network
-#: requests.  ``queue_sum`` — per-cycle sum of all reservation-queue
-#: depths; ``queue_max`` — max depth seen in the window.
+#: requests.  ``loc_msgs``/``xcl_msgs`` — NoC link-occupancy split by
+#: locality: accepted requests whose (core, bank) path stays inside the
+#: leaf cluster vs those crossing a cluster boundary (a topology-aware
+#: split of the acceptance stream; under the ``flat`` topology every
+#: accepted request is local and ``xcl_msgs`` is identically 0).
+#: ``queue_sum`` — per-cycle sum of all reservation-queue depths;
+#: ``queue_max`` — max depth seen in the window.
 TELE_CHANNELS = ("active", "sleeping", "backoff", "barwait",
                  "grants", "retires", "fails", "enqueues", "wakes",
-                 "msgs", "net_stall", "queue_sum", "queue_max")
+                 "msgs", "net_stall", "loc_msgs", "xcl_msgs",
+                 "queue_sum", "queue_max")
 
 #: number of telemetry columns; the engine's accumulator is
 #: ``(n_windows, TELE_K)``

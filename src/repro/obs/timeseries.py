@@ -135,6 +135,20 @@ class Timeseries:
         return self.per_cycle("backoff")
 
     @property
+    def local_msgs(self) -> np.ndarray:
+        """Accepted intra-cluster (local-hop) messages per cycle per
+        window.  Under the ``flat`` topology every message is local."""
+        return self.per_cycle("loc_msgs")
+
+    @property
+    def cross_cluster_msgs(self) -> np.ndarray:
+        """Accepted messages per cycle per window that crossed the first
+        hierarchy level (``core.topologies``) — the NoC link-occupancy
+        split the cluster topologies are about.  Identically zero under
+        ``flat``."""
+        return self.per_cycle("xcl_msgs")
+
+    @property
     def queue_depth_mean(self) -> np.ndarray:
         """Mean reservation-queue depth per *bank* per window
         (``queue_sum`` / cycles / banks); 0 for queueless protocols."""

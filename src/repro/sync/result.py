@@ -226,6 +226,7 @@ class Result:
         row: Dict[str, Any] = {
             "protocol": self.spec.protocol.name,
             "workload": self.spec.workload.name,
+            "topology": self.spec.topology.name,
             "cores": self.spec.topology.n_cores,
         }
         row.update(self.metrics())

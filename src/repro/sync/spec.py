@@ -74,11 +74,16 @@ class Workload:
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    """The simulated machine."""
+    """The simulated machine: size, NoC shape, and network knobs."""
+    name: str = "flat"        # NoC topology (core.topologies registry):
+    #                           flat single crossbar, or hierarchical
+    #                           cluster2/cluster3 with per-level extra
+    #                           latency and cross-cluster link budgets
     n_cores: int = 256
     n_addrs: int = 1          # contended addresses (fewer = hotter)
     net_bw: int = 64          # network acceptances per cycle
     hol_block: int = 16       # parked reqs per occupied net slot (0 = off)
+    clusters: int = 4         # leaf clusters (hierarchical topologies)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +135,7 @@ ANALYSIS_BOUNDS: Dict[str, tuple] = {
     "zipf_skew": (0, 10_000),
     "telemetry_windows": (0, 2**16),
     "unroll": (1, 64),
+    "clusters": (1, 4_096),
 }
 
 #: (spec attribute, group class) in declaration order.  ``faults`` is
@@ -152,7 +158,8 @@ def _build_group(gname: str, gcls, value, flat: Dict[str, Any]):
     """One group instance from (group value or None) + routed flat kwargs."""
     if isinstance(value, gcls):
         base = dataclasses.asdict(value)
-    elif isinstance(value, str) and gname in ("protocol", "workload"):
+    elif isinstance(value, str) and gname in ("protocol", "workload",
+                                              "topology"):
         base = {"name": value}
     elif isinstance(value, Mapping):
         base = dict(value)
@@ -161,7 +168,8 @@ def _build_group(gname: str, gcls, value, flat: Dict[str, Any]):
     else:
         raise ValueError(
             f"Spec {gname} must be a {gcls.__name__}, a dict"
-            + (", a name string" if gname in ("protocol", "workload")
+            + (", a name string" if gname in ("protocol", "workload",
+                                              "topology")
                else "") + f" or None (got {value!r})")
     known = {f.name for f in dataclasses.fields(gcls)}
     unknown = set(base) - known
@@ -208,6 +216,7 @@ class Spec:
     def _lower(self) -> SimParams:
         kw: Dict[str, Any] = {"protocol": self.protocol.name,
                               "workload": self.workload.name,
+                              "topology": self.topology.name,
                               "faults": self.faults}
         for gname, gcls in _GROUPS:
             if gname == "faults":          # one engine field, not flattened
@@ -260,7 +269,8 @@ class Spec:
         for k, v in changes.items():
             if k not in merged:
                 continue
-            if isinstance(v, str) and k in ("protocol", "workload"):
+            if isinstance(v, str) and k in ("protocol", "workload",
+                                            "topology"):
                 merged[k]["name"] = v
             elif isinstance(v, Mapping):
                 merged[k].update(v)

@@ -57,6 +57,49 @@ def test_summary_trend_flags_hold(summary):
     assert head["min_lrsc_over_colibri_energy_256"] > 1.0
 
 
+TOPOLOGY_REPORT = os.path.join(REPORTS_DIR, "benchmarks.topology.json")
+
+
+@pytest.fixture(scope="module")
+def topology():
+    if not os.path.exists(TOPOLOGY_REPORT):
+        pytest.skip(f"no topology report at {TOPOLOGY_REPORT}; generate "
+                    "with `benchmarks/run.py --only topology`")
+    with open(TOPOLOGY_REPORT) as f:
+        return json.load(f)["topology"]
+
+
+def test_topology_rows_carry_topology_column(topology):
+    """Every topology-benchmark row names its NoC (the ``topology``
+    column every ``Result.to_row`` now emits), carries the metric
+    triple, and bills hops only on hierarchical rows."""
+    from repro.core.topologies import names as topo_names
+    rows = topology["rows"]
+    assert rows, "topology report has no rows"
+    assert {r["topology"] for r in rows} >= {"flat", "cluster2"}
+    for row in rows:
+        assert row["topology"] in topo_names(), row["row"]
+        for k in METRIC_TRIPLE:
+            assert k in row and math.isfinite(row[k]), (row["row"], k)
+        assert row["hops_per_op"] >= 0.0
+        if row["topology"] == "flat":
+            assert row["hops_per_op"] == 0.0
+        elif row["throughput"] > 0:
+            assert row["hops_per_op"] > 0.0, row["row"]
+
+
+def test_topology_headline_contrast(topology):
+    """The headline the README quotes: on the cluster2 NoC the
+    polling-free waiters beat lrsc, whose retry storm crosses clusters
+    on every poll."""
+    head = topology["headline"]
+    assert head["hier_over_lrsc_cluster2"] > 1.0
+    assert head["colibri_over_lrsc_cluster2"] > 1.0
+    assert head["lrsc_hops_per_op_cluster2"] > \
+        head["hier_hops_per_op_cluster2"]
+    assert head["ladder_monotone"] == 1.0
+
+
 FAULTS_REPORT = os.path.join(REPORTS_DIR, "benchmarks.faults.json")
 
 

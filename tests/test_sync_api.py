@@ -203,7 +203,7 @@ def test_spec_covers_every_simparams_field():
     the single ``SimParams.faults`` field."""
     from repro.faults import FaultPlan
     fault_fields = {f.name for f in dataclasses.fields(FaultPlan)}
-    flat = set(_FLAT_TO_GROUP) | {"protocol", "workload"}
+    flat = set(_FLAT_TO_GROUP) | {"protocol", "workload", "topology"}
     assert fault_fields <= set(_FLAT_TO_GROUP)
     assert (flat - fault_fields) | {"faults"} == \
         {f.name for f in dataclasses.fields(SimParams)}
